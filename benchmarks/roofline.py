@@ -1,0 +1,76 @@
+"""Roofline table from the dry-run JSONs (launch/dryrun.py output).
+
+Prints per (arch × shape × mesh): the three roofline terms, dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs ratio, per-device memory — the §Roofline
+deliverable. ``python -m benchmarks.roofline [--tag baseline] [--md]``.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def load(tag: str = "baseline") -> list[dict]:
+    rows = []
+    for f in sorted(glob.glob(str(RESULTS / f"*__{tag}.json"))):
+        rows.append(json.loads(pathlib.Path(f).read_text()))
+    return rows
+
+
+def table(tag: str = "baseline", mesh: str | None = None) -> list[dict]:
+    out = []
+    for r in load(tag):
+        if mesh and r["mesh"] != mesh:
+            continue
+        row = {"arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+               "status": r["status"]}
+        if r["status"] == "SKIP":
+            row["note"] = r.get("reason", "")[:60]
+        elif r["status"] == "OK":
+            rf = r["roofline"]
+            row.update({
+                "compute_s": round(rf["compute_s"], 4),
+                "memory_s": round(rf["memory_s"], 4),
+                "collective_s": round(rf["collective_s"], 4),
+                "dominant": rf["dominant"],
+                "roofline_frac": round(rf["roofline_fraction"], 4),
+                "useful_flops": round(rf["useful_flops_ratio"], 3),
+                "hbm_gb_per_dev": round(r["memory"]["peak_bytes"] / 1e9, 1),
+                "compile_s": r.get("compile_s"),
+            })
+        else:
+            row["note"] = r.get("error", "")[:60]
+        out.append(row)
+    return out
+
+
+def print_markdown(rows: list[dict]) -> None:
+    cols = ["arch", "shape", "mesh", "status", "compute_s", "memory_s",
+            "collective_s", "dominant", "roofline_frac", "useful_flops",
+            "hbm_gb_per_dev"]
+    print("| " + " | ".join(cols) + " |")
+    print("|" + "---|" * len(cols))
+    for r in rows:
+        print("| " + " | ".join(str(r.get(c, "")) for c in cols) + " |")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--md", action="store_true")
+    a = ap.parse_args()
+    rows = table(a.tag, a.mesh)
+    if a.md:
+        print_markdown(rows)
+    else:
+        for r in rows:
+            print(json.dumps(r))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Benchmark driver: one function per paper table/figure + kernel timings.
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = the figure/table
+metric). Full rows land in benchmarks/results/bench_rows.json.
+``REPRO_BENCH_FAST=0`` for the larger settings.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+
+def _kernel_timings() -> list[dict]:
+    """µs/call for the three Pallas kernels (interpret) vs jnp oracles."""
+    from repro.core.fakequant import pack_int4
+    from repro.kernels import quant_matmul, flash_attention
+    from repro.kernels import ref
+    from .common import timed
+    key = jax.random.PRNGKey(0)
+    rows = []
+    M, K, N = 128, 256, 128
+    x = jax.random.normal(key, (M, K), jnp.float32)
+    qw = pack_int4(jax.random.randint(key, (K, N), -7, 8).astype(jnp.int8), 0)
+    swl, swr = jnp.full((K,), 0.02), jnp.ones((N,))
+    t_ref = timed(jax.jit(ref.quant_matmul_ref), x, qw, swl, swr)
+    rows.append({"name": "kernel.quant_matmul_ref_xla", "us_per_call": t_ref,
+                 "derived": f"{2*M*K*N/t_ref/1e3:.1f}MFLOP/s"})
+    B, S, hd = 4, 256, 64
+    q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (B, S, hd))
+               for i in range(3))
+    t_fa = timed(jax.jit(ref.flash_attention_ref), q, k, v)
+    rows.append({"name": "kernel.flash_attention_ref_xla", "us_per_call": t_fa,
+                 "derived": ""})
+    return rows
+
+
+def main() -> None:
+    from . import paper_figures as F
+    from . import roofline
+    t_all = time.time()
+    all_rows: list[dict] = []
+    benches = [
+        ("fig3_mmse_granularity", F.fig3_mmse_granularity),
+        ("table2_no_qft", F.table2_no_qft),
+        ("table1_qft_vs_baselines", F.table1_qft_vs_baselines),
+        ("fig5_dataset_size", F.fig5_dataset_size),
+        ("fig6_ce_mix", F.fig6_ce_mix),
+        ("fig7_lr_scan", F.fig7_lr_scan),
+        ("fig8_cle_2x2", F.fig8_cle_2x2),
+        ("fig9_dch_training", F.fig9_dch_training),
+        ("kernel_timings", _kernel_timings),
+    ]
+    print("name,us_per_call,derived")
+    for name, fn in benches:
+        t0 = time.time()
+        try:
+            rows = fn()
+            dt = (time.time() - t0) * 1e6
+            for r in rows:
+                us = r.get("us_per_call", dt / max(len(rows), 1))
+                derived = r.get("derived") or json.dumps(
+                    {k: v for k, v in r.items()
+                     if k not in ("name", "us_per_call", "derived")},
+                    default=str)[:160].replace(",", ";")
+                print(f"{r['name']},{us:.1f},{derived}")
+            all_rows.extend(rows)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name},0,ERROR:{type(e).__name__}:{e}")
+            traceback.print_exc()
+    # roofline summary (from dry-run artifacts, if present)
+    try:
+        rl = roofline.table()
+        ok = [r for r in rl if r.get("status") == "OK"]
+        for r in ok:
+            print(f"roofline.{r['arch']}.{r['shape']}.{r['mesh']},0,"
+                  f"dom={r['dominant']};frac={r['roofline_frac']};"
+                  f"hbm={r['hbm_gb_per_dev']}GB")
+        all_rows.extend(rl)
+    except Exception as e:  # noqa: BLE001
+        print(f"roofline,0,ERROR:{e}")
+    out = pathlib.Path(__file__).resolve().parent / "results" / "bench_rows.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(all_rows, indent=1, default=str))
+    print(f"# total {time.time()-t_all:.1f}s; rows -> {out}")
+
+
+if __name__ == "__main__":
+    main()

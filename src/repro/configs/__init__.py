@@ -1,0 +1,2 @@
+from .registry import (ARCH_IDS, SHAPES, get_config, get_module, input_specs,
+                       skip_reason, cell_list, ShapeSpec)

@@ -1,0 +1,12 @@
+"""Command-R+ 104B [hf:CohereForAI/c4ai-command-r-v01]: 64L d=12288 96H (kv=8) ff=33792 V=256000, no-bias."""
+import dataclasses
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-plus-104b", family="dense", n_layers=64, d_model=12288,
+    n_heads=96, n_kv_heads=8, d_ff=33792, vocab=256000, head_dim=128,
+    rope_theta=1e4, bias=False)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=96, n_heads=6, n_kv_heads=2, d_ff=256,
+    vocab=512, head_dim=16)

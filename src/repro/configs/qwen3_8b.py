@@ -1,0 +1,12 @@
+"""Qwen3-8B [hf:Qwen/Qwen3-8B]: 36L d=4096 32H (GQA kv=8) ff=12288 V=151936, qk_norm."""
+import dataclasses
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-8b", family="dense", n_layers=36, d_model=4096, n_heads=32,
+    n_kv_heads=8, d_ff=12288, vocab=151936, head_dim=128, qk_norm=True,
+    rope_theta=1e6)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+    vocab=512, head_dim=16)

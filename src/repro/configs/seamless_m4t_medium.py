@@ -1,0 +1,18 @@
+"""SeamlessM4T-medium [arXiv:2308.11596]: enc-dec 12L+12L d=1024 16H ff=4096 V=256206.
+
+Multimodal (speech/text) — audio frontend STUBBED: input_specs() provides
+precomputed frame embeddings [B, S_enc, d]. GELU MLP (conformer-lite backbone
+approximated as a standard transformer per pool spec). Decoder: 12L causal +
+cross-attention. Vocab padded to 256256 for TP16 (DESIGN.md §5).
+"""
+import dataclasses
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium", family="encdec", n_layers=12, enc_layers=12,
+    d_model=1024, n_heads=16, n_kv_heads=16, d_ff=4096, vocab=256206,
+    head_dim=64, mlp="gelu", rope_theta=1e4)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, enc_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=128, vocab=512, head_dim=16)

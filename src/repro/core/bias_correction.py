@@ -1,0 +1,54 @@
+"""Empirical bias correction (paper [29], used in Table 2 baselines).
+
+Zeroes the 1st moment of the per-channel quantization error at each linear's
+output by shifting the bias:  b ← b + E[x@W − x̂@Ŵ]  over a calibration batch.
+
+Implemented generically: the model exposes per-linear output taps (models.*
+forward with ``capture=...``); we run teacher & student on the same batch and
+fold the mean difference into the student's bias DoF.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def bias_correct(taps_fp: dict[str, jax.Array], taps_q: dict[str, jax.Array],
+                 params: dict, path_map: dict[str, tuple]) -> dict:
+    """Fold E[fp_out − q_out] (over all leading axes) into each linear's bias.
+
+    path_map: tap name → key-path of the qlinear params dict inside ``params``
+    (created with a 'b' entry). Returns updated params (functional).
+    """
+    import copy
+    new = copy.copy(params)
+
+    def set_in(tree, path, fn):
+        node = tree
+        for k in path[:-1]:
+            node[k] = copy.copy(node[k])
+            node = node[k]
+        node[path[-1]] = copy.copy(node[path[-1]])
+        node[path[-1]]["b"] = fn(node[path[-1]].get("b"))
+        return tree
+
+    for name, path in path_map.items():
+        if name not in taps_fp:
+            continue
+        diff = (taps_fp[name].astype(jnp.float32)
+                - taps_q[name].astype(jnp.float32))
+        corr = jnp.mean(diff.reshape(-1, diff.shape[-1]), axis=0)
+        new = set_in(new, path,
+                     lambda b, c=corr: c if b is None else b + c)
+    return new
+
+
+def empirical_bias_correction(forward_fp: Callable, forward_q: Callable,
+                              params_fp, params_q, batch,
+                              path_map: dict[str, tuple]) -> dict:
+    """Convenience wrapper: run both nets with taps and correct the biases."""
+    _, taps_fp = forward_fp(params_fp, batch)
+    _, taps_q = forward_q(params_q, batch)
+    return bias_correct(taps_fp, taps_q, params_q, path_map)

@@ -1,0 +1,67 @@
+"""Activation-range calibration (paper §4: naive max-min for activations,
+MMSE for weights — 'a sole pre-QFT step').
+
+The model forward exposes stream taps; we run a few calibration batches and
+set each stream's (log_sa, zp) from observed ranges.  Per-channel max is used
+for the vector scale (the CLE DoF starts uniform when ranges are uniform).
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+
+from .qconfig import QuantConfig, Granularity
+
+
+def ranges_from_batch(taps: dict[str, jax.Array]) -> dict[str, tuple[jax.Array, jax.Array]]:
+    out = {}
+    for name, x in taps.items():
+        x = x.astype(jnp.float32).reshape(-1, x.shape[-1])
+        out[name] = (jnp.min(x, axis=0), jnp.max(x, axis=0))
+    return out
+
+
+def merge_ranges(a, b):
+    return {k: (jnp.minimum(a[k][0], b[k][0]), jnp.maximum(a[k][1], b[k][1]))
+            for k in a}
+
+
+def stream_params_from_range(lo: jax.Array, hi: jax.Array, cfg: QuantConfig,
+                             per_channel: bool | None = None) -> dict:
+    """(lo, hi) per channel → {log_sa, zp} for unsigned a_bits encoding.
+
+    In LW activation mode the paper still keeps the *vector* S_a DoF (it is the
+    CLE DoF); only the HW rescale F̂ is scalar.  So per_channel defaults True.
+    """
+    bits = cfg.a_bits or 8
+    qmax = 2 ** bits - 1
+    if per_channel is False:
+        # paper §4: scalar (per-tensor) range calibration; the VECTOR
+        # structure of S_a enters only via CLE (Eq. 18) or QFT training.
+        # (Per-channel calibration would push dead-channel activation spread
+        # into the tied weight grids of Eq. 2 — observed catastrophic.)
+        lo = jnp.broadcast_to(jnp.min(lo), lo.shape)
+        hi = jnp.broadcast_to(jnp.max(hi), hi.shape)
+    lo = jnp.minimum(lo, 0.0)
+    hi = jnp.maximum(hi, lo + 1e-6)
+    scale = (hi - lo) / qmax
+    # dead/near-dead channels (post-ReLU zeros) would otherwise get ~0 scale,
+    # exploding any tied weight grid (Eq. 2) — floor to 1e-3 of the layer max
+    scale = jnp.maximum(scale, jnp.max(scale) * 1e-3 + 1e-12)
+    zp = jnp.round(-lo / scale)            # per-channel zero-point
+    return {"log_sa": jnp.log(scale).astype(jnp.float32),
+            "zp": zp.astype(jnp.float32)}
+
+
+def calibrate_streams(forward_with_taps: Callable, params, batches: Iterable,
+                      cfg: QuantConfig) -> dict[str, dict]:
+    """Run calibration batches; return {stream_name: {log_sa, zp}}."""
+    acc = None
+    for batch in batches:
+        _, taps = forward_with_taps(params, batch)
+        r = ranges_from_batch(taps)
+        acc = r if acc is None else merge_ranges(acc, r)
+    assert acc is not None, "need at least one calibration batch"
+    return {k: stream_params_from_range(lo, hi, cfg) for k, (lo, hi) in acc.items()}

@@ -1,0 +1,52 @@
+"""Knowledge-distillation losses for the QFT regime (paper §3.1, Fig. 6).
+
+Default: normalized L2 on the *backbone output* (last hidden states — the
+sequence analogue of the paper's pre-average-pooling features), task-agnostic
+and spatially/temporally rich.  Classic CE-on-logits is supported only as a
+mix-in for the Fig. 6 ablation — the paper finds it detrimental in small-data.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def backbone_l2(h_student: jax.Array, h_teacher: jax.Array,
+                mask: jax.Array | None = None) -> jax.Array:
+    """||h_S − h_T||² / ||h_T||²  (normalized; per-token, masked mean)."""
+    h_s = h_student.astype(jnp.float32)
+    h_t = jax.lax.stop_gradient(h_teacher.astype(jnp.float32))
+    err = jnp.sum((h_s - h_t) ** 2, axis=-1)
+    ref = jnp.sum(h_t ** 2, axis=-1) + 1e-6
+    per_tok = err / ref
+    if mask is not None:
+        per_tok = per_tok * mask
+        return jnp.sum(per_tok) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(per_tok)
+
+
+def logits_ce(logits_student: jax.Array, logits_teacher: jax.Array,
+              mask: jax.Array | None = None, temperature: float = 1.0) -> jax.Array:
+    """Classic KD [37]: cross-entropy of student logits vs teacher soft targets."""
+    zs = logits_student.astype(jnp.float32) / temperature
+    zt = jax.lax.stop_gradient(logits_teacher.astype(jnp.float32)) / temperature
+    pt = jax.nn.softmax(zt, axis=-1)
+    ce = -jnp.sum(pt * jax.nn.log_softmax(zs, axis=-1), axis=-1)
+    if mask is not None:
+        ce = ce * mask
+        return jnp.sum(ce) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(ce)
+
+
+def qft_loss(h_student: jax.Array, h_teacher: jax.Array,
+             logits_student: jax.Array | None = None,
+             logits_teacher: jax.Array | None = None,
+             ce_proportion: float = 0.0,
+             mask: jax.Array | None = None) -> jax.Array:
+    """Paper default: pure backbone L2 (ce_proportion = 0). Fig. 6 mixes CE in."""
+    loss = backbone_l2(h_student, h_teacher, mask)
+    if ce_proportion > 0.0:
+        assert logits_student is not None and logits_teacher is not None
+        ce = logits_ce(logits_student, logits_teacher, mask)
+        loss = (1.0 - ce_proportion) * loss + ce_proportion * ce
+    return loss

@@ -1,0 +1,261 @@
+"""The offline subgraph: all deployment parameters inferred from the DoF set.
+
+Paper §3.3–3.4: start from over-parameterized scales, impose the HW constraints
+(partial sums share a scale; recode multiplies scale by a constant), and solve —
+the kernel scale matrix collapses to an outer product
+
+    S_w[m, n] = S_wL[m] · S_wR[n],   S_wL^l = 1/S_a^{l-1},   S_wR^l = S_a^l·F̂^l  (Eq. 2)
+
+The *trainable DoF* per quantized linear are therefore (Eq. 6 / Eqs. 3-4):
+
+    W (FP master), b, log_sa_in[m] (the input-stream scale, shared across all
+    fan-out siblings — the CLE DoF of Corollary 1), log_swr (scalar for
+    layerwise HW rescale, per-out-channel vector for channelwise; folding
+    S_a^l·F̂^l, both per-out-channel, into one free log-parameter).
+
+Everything else (quantized weights Ŵ, rescale factors F̂, activation encodings)
+is *computed* from these in the forward pass; a single STE on each
+``clip(round(.))`` makes the whole computation differentiable, so scales train
+natively — no LSQ-style custom gradients (paper's key simulation claim).
+
+Scales are parameterized in log-domain (positivity; see DESIGN.md §9.2).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .fakequant import fake_quant, fake_quant_act, pack_int4, quantize
+from .mmse import apq_scales, ppq_scale
+from .qconfig import Granularity, QuantConfig
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Stream (activation quant point) — owns the S_a vector DoF.
+# ---------------------------------------------------------------------------
+
+def init_stream(dim: int, a_scale: float = 1.0 / 16.0) -> Params:
+    """A quantization point on an activation stream of width ``dim``.
+
+    ``log_sa`` is the per-channel activation scale (the CLE DoF); ``zp`` the
+    zero-point for unsigned encoding. Calibration (core.calibration) overwrites
+    these from observed ranges before QFT starts.
+    """
+    return {
+        "log_sa": jnp.full((dim,), jnp.log(a_scale), dtype=jnp.float32),
+        "zp": jnp.zeros((dim,), dtype=jnp.float32),   # per-channel zero-point
+        # (App. A: zero-points join the scales as DoF with their own
+        # additive relations; scalar zp with per-channel scales would clip
+        # channels whose offset deviates from the mean)
+    }
+
+
+def stream_fake_quant(x: jax.Array, stream: Params, cfg: QuantConfig) -> jax.Array:
+    """Apply A-bit fake quantization at a stream point (no-op in permissive mode)."""
+    if not cfg.act_quant:
+        return x
+    scale = jnp.exp(stream["log_sa"]).astype(x.dtype)
+    return fake_quant_act(x, scale, cfg.a_bits, zero_point=stream["zp"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Quantized linear — offline subgraph for the kernel.
+# ---------------------------------------------------------------------------
+
+def init_qlinear(key: jax.Array, d_in: int, d_out: int, cfg: QuantConfig | None,
+                 bias: bool = False, w_init_scale: float | None = None,
+                 expert_dim: int | None = None, w_bits: int | None = None) -> Params:
+    """Create master weights + scale DoF.  ``expert_dim`` stacks E experts.
+
+    ``w_bits`` overrides cfg.w_bits for exempted (8-bit) layers.
+    """
+    shape = (d_in, d_out) if expert_dim is None else (expert_dim, d_in, d_out)
+    std = w_init_scale if w_init_scale is not None else d_in ** -0.5
+    p: Params = {"w": jax.random.normal(key, shape, dtype=jnp.float32) * std}
+    if bias:
+        bshape = (d_out,) if expert_dim is None else (expert_dim, d_out)
+        p["b"] = jnp.zeros(bshape, dtype=jnp.float32)
+    if cfg is not None:
+        bits = w_bits or cfg.w_bits   # NOT stored in params (kept static in
+        # the quant plan and passed at apply time) so layer pytrees stay
+        # pure-array and vmap/scan-stackable.
+        swr_shape: tuple[int, ...]
+        if cfg.swr_per_channel:
+            swr_shape = (d_out,) if expert_dim is None else (expert_dim, d_out)
+        else:
+            swr_shape = () if expert_dim is None else (expert_dim,)
+        # init refined by mmse_init_qlinear(); a sane default for fresh nets:
+        p["log_swr"] = jnp.full(swr_shape, jnp.log(std / (2 ** (bits - 1) - 1)),
+                                dtype=jnp.float32)
+    return p
+
+
+def weight_scale(p: Params, log_sa_in: jax.Array | None) -> jax.Array:
+    """S_w = S_wL ⊗ S_wR with S_wL = 1/S_a_in (Eq. 2).  Broadcasts experts."""
+    log_swr = p["log_swr"]
+    expert_stacked = p["w"].ndim == 3
+    if log_swr.ndim == 0 or (expert_stacked and log_swr.ndim == 1):
+        s_wr = jnp.exp(log_swr)[..., None, None] if expert_stacked else jnp.exp(log_swr)
+    else:
+        s_wr = jnp.exp(log_swr)[..., None, :]  # [*, 1, out]
+    if log_sa_in is None:
+        return jnp.broadcast_to(s_wr, p["w"].shape) if expert_stacked else s_wr
+    s_wl = jnp.exp(-log_sa_in)[..., :, None]   # [..., in, 1]
+    # expert/layer-stacked weights: the stream scale is shared across the
+    # stacked axes between the leading dims and [in, out] — insert them
+    while s_wl.ndim < p["w"].ndim:
+        s_wl = jnp.expand_dims(s_wl, -3)
+    return s_wl * s_wr
+
+
+def effective_weight(p: Params, cfg: QuantConfig | None,
+                     log_sa_in: jax.Array | None = None,
+                     compute_dtype=jnp.bfloat16,
+                     bits: int | None = None) -> jax.Array:
+    """Offline subgraph output: the fake-quantized (deploy-equivalent) weight.
+
+    log_sa_in: the consuming stream's S_a DoF (ties S_wL per Eq. 2); None for
+    linears whose input is not a CLE-coupled stream (then S_wL ≡ 1).
+    ``bits``: static per-layer override from the quant plan (exempt layers).
+    """
+    w = p["w"]
+    if cfg is None:
+        return w.astype(compute_dtype)
+    s = weight_scale(p, log_sa_in)
+    return fake_quant(w, s, bits or cfg.w_bits, signed=True).astype(compute_dtype)
+
+
+def qlinear(x: jax.Array, p: Params, cfg: QuantConfig | None,
+            stream: Params | None = None, precision=None,
+            bits: int | None = None) -> jax.Array:
+    """Online+offline subgraphs for  y = x̂ @ W_eff + b.
+
+    ``stream``: the input quant point. Supplies both the activation fake-quant
+    (online) and S_wL (offline) — the coupling that makes equalization and
+    clipping "one and the same" (paper Appendix D).
+    """
+    log_sa = None
+    if stream is not None and cfg is not None:
+        x = stream_fake_quant(x, stream, cfg)
+        log_sa = stream["log_sa"]
+    w_eff = effective_weight(p, cfg, log_sa, compute_dtype=x.dtype, bits=bits)
+    y = jax.lax.dot_general(x, w_eff, (((x.ndim - 1,), (0,)), ((), ())),
+                            precision=precision)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# MMSE initialization (the paper's sole pre-QFT step, §4)
+# ---------------------------------------------------------------------------
+
+def mmse_init_qlinear(p: Params, cfg: QuantConfig, bits: int | None = None,
+                      log_sa_in: jax.Array | None = None) -> Params:
+    """Initialize log_swr from MMSE, inverting Eq. 2 (paper §4):
+
+    The *total* kernel scale is S_wL ⊗ S_wR with S_wL = 1/S_a tied to the
+    input stream, so the MMSE fit for S_wR must run on the pre-scaled kernel
+    W' = W ⊙ S_a[:,None] (equivalently: F̂ solved from Eq. 2 given S_a and the
+    MMSE-optimal total scale).  Ignoring the tie mis-scales the grid by S_a.
+
+    lw   → scalar PPQ scale (Eq. 5a)
+    chw  → per-out-channel PPQ (Eq. 5b)
+    dchw handled jointly with the stream by apq_init_qlinear().
+    """
+    w = p["w"]
+    bits = bits or cfg.w_bits
+    if log_sa_in is not None:
+        w = w * jnp.exp(log_sa_in)[..., :, None]
+
+    def one(wm):
+        if cfg.swr_per_channel:
+            s = ppq_scale(wm, bits, axes=(0,), iters=cfg.mmse_iters)[0]  # [out]
+        else:
+            s = ppq_scale(wm, bits, axes=None, iters=cfg.mmse_iters).reshape(())
+        return jnp.log(jnp.maximum(s, 1e-12))
+
+    log_swr = jax.vmap(one)(w) if w.ndim == 3 else one(w)
+    return {**p, "log_swr": log_swr.astype(jnp.float32)}
+
+
+def apq_init_qlinear(p: Params, cfg: QuantConfig,
+                     bits: int | None = None) -> tuple[Params, jax.Array]:
+    """Doubly-channelwise init via APQ (Alg. 2). Returns (params, log_swl).
+
+    The caller folds log_swl into the shared stream scale (log_sa = -log_swl);
+    for fan-out streams the fold is a weighted geometric mean across siblings.
+    """
+    w = p["w"]
+    bits = bits or cfg.w_bits
+    if w.ndim == 3:  # experts: APQ per expert; share S_wL via geomean
+        s, t = jax.vmap(lambda we: apq_scales(we, bits, cfg.mmse_iters))(w)
+        log_swl = jnp.mean(jnp.log(s[..., 0]), axis=0)        # [in]
+        log_swr = jnp.log(t[:, 0, :])                         # [E, out]
+    else:
+        s, t = apq_scales(w, bits, iters=cfg.mmse_iters)
+        log_swl = jnp.log(s[:, 0])
+        log_swr = jnp.log(t[0, :])
+    return {**p, "log_swr": log_swr.astype(jnp.float32)}, log_swl.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Deployment export — the "offline" computation run once at compile time.
+# ---------------------------------------------------------------------------
+
+def export_qlinear(p: Params, cfg: QuantConfig,
+                   log_sa_in: jax.Array | None = None,
+                   pack: bool = True, bits: int | None = None) -> Params:
+    """Freeze the offline subgraph into deployment constants.
+
+    Returns {q (int4 nibble-packed uint8 | int8), s_wl?, s_wr, b?} — what a
+    compiler would burn into the accelerator binary. Used by serve/ and the
+    Pallas quant_matmul kernel.  All leaves are arrays (vmap/scan-stackable);
+    whether q is packed is static (bits==4 and even in-dim) and recorded by
+    the caller's deploy plan.
+    """
+    bits = bits or cfg.w_bits
+    s = weight_scale(p, log_sa_in)
+    q = quantize(p["w"], s, bits, signed=True)
+    out: Params = {}
+    if bits == 4 and pack and p["w"].shape[-2] % 2 == 0:
+        out["q"] = pack_int4(q.astype(jnp.int8), axis=-2)
+    else:
+        out["q"] = q.astype(jnp.int8)
+    if log_sa_in is not None:
+        out["s_wl"] = jnp.exp(-log_sa_in).astype(jnp.float32)
+    log_swr = p["log_swr"]
+    out["s_wr"] = jnp.exp(log_swr).astype(jnp.float32)
+    if "b" in p:
+        out["b"] = p["b"].astype(jnp.float32)
+    return out
+
+
+def dequantize_export(ex: Params, compute_dtype=jnp.bfloat16,
+                      packed: bool = True) -> jax.Array:
+    """Reference decode of an exported linear (XLA serving path / kernel oracle).
+
+    q: [..., in(/2 if packed), out]; s_wr: [..., out] or [...]; s_wl: [..., in].
+    """
+    from .fakequant import unpack_int4
+    q = ex["q"]
+    if packed and q.dtype == jnp.uint8:
+        q = unpack_int4(q, axis=-2)
+    w = q.astype(compute_dtype)
+    s_wr = ex["s_wr"]
+    if s_wr.ndim == w.ndim - 2:          # scalar per (stacked) linear
+        w = w * s_wr[..., None, None].astype(compute_dtype)
+    else:
+        w = w * s_wr[..., None, :].astype(compute_dtype)
+    if ex.get("s_wl") is not None:
+        s_wl = ex["s_wl"][..., :, None].astype(compute_dtype)
+        # stream scale shared across stacked expert axes (fan-out rule):
+        # insert them between the leading dims and [in, out]
+        while s_wl.ndim < w.ndim:
+            s_wl = jnp.expand_dims(s_wl, -3)
+        w = w * s_wl
+    return w

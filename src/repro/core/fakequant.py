@@ -1,0 +1,98 @@
+"""STE fake-quantization primitives (paper §3.4, Appendix A).
+
+The paper's central simulation rule: the *only* non-differentiable elements are
+``clip(round(.))`` "bit-discarding" ops; decorate each with a Straight-Through
+Estimator and let gradients flow *natively* through the offline subgraph that
+computes scales and quantized weights.  No LSQ/PACT-style hand-written scale
+gradients — we unit-test that the emergent scale gradient matches LSQ's formula
+(tests/test_core_fakequant.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ste_round(x: jax.Array) -> jax.Array:
+    """round-to-nearest(-even) with identity gradient (STE, [11] in paper)."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def qrange(bits: int, signed: bool = True) -> tuple[float, float]:
+    """Integer grid range.  Symmetric signed uses ±(2^{b-1}-1) (paper Eq. 1)."""
+    if signed:
+        qmax = float(2 ** (bits - 1) - 1)
+        return -qmax, qmax
+    return 0.0, float(2**bits - 1)
+
+
+def quantize(x: jax.Array, scale: jax.Array, bits: int, signed: bool = True,
+             zero_point: jax.Array | None = None) -> jax.Array:
+    """Lossy encode: ``clip(round(x/scale) + zp)`` with STE.
+
+    ``scale`` broadcasts against ``x`` (scalar, per-channel vector, or the
+    outer-product doubly-channelwise scale from core.dof).
+    """
+    lo, hi = qrange(bits, signed)
+    q = ste_round(x / scale)
+    if zero_point is not None:
+        q = q + zero_point
+    return jnp.clip(q, lo, hi)
+
+
+def dequantize(q: jax.Array, scale: jax.Array,
+               zero_point: jax.Array | None = None) -> jax.Array:
+    if zero_point is not None:
+        q = q - zero_point
+    return q * scale
+
+
+def fake_quant(x: jax.Array, scale: jax.Array, bits: int, signed: bool = True,
+               zero_point: jax.Array | None = None) -> jax.Array:
+    """quantize → dequantize.  The composition is end-to-end differentiable:
+
+    - w.r.t. ``x``: STE inside range, 0 outside (clip's true gradient).
+    - w.r.t. ``scale``: the native chain rule through ``scale * clip(round(x/scale))``
+      yields exactly the LSQ gradient (q - x/s inside range, ±qmax outside).
+    """
+    return dequantize(quantize(x, scale, bits, signed, zero_point), scale,
+                      zero_point)
+
+
+def fake_quant_act(x: jax.Array, scale: jax.Array, bits: int = 8,
+                   zero_point: jax.Array | None = None) -> jax.Array:
+    """Unsigned asymmetric activation fake-quant (paper W4A8 setting).
+
+    ``fakeQuant(x, 0, 2^b - 1)`` in the paper's Appendix A semantics; the
+    zero-point is itself a trainable DoF (rounded with STE to stay on-grid).
+    """
+    zp = None if zero_point is None else ste_round(zero_point)
+    return fake_quant(x, scale, bits, signed=False, zero_point=zp)
+
+
+def pack_int4(q: jax.Array, axis: int = -2) -> jax.Array:
+    """Pack signed int4 values (as int8 in [-7, 7]) into uint8 pairs.
+
+    Deployment export format for the serving path and the Pallas quant-matmul
+    kernel: two nibbles per byte along ``axis`` (default: the in-channel axis
+    of a [..., in, out] weight). Supports arbitrary leading dims (layer-stacked
+    and expert-stacked weights).
+    """
+    axis = axis % q.ndim
+    assert q.shape[axis] % 2 == 0, "pack axis must be even"
+    u = (q.astype(jnp.int8) & 0x0F).astype(jnp.uint8)
+    lo = jax.lax.slice_in_dim(u, 0, None, 2, axis)
+    hi = jax.lax.slice_in_dim(u, 1, None, 2, axis)
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_int4(p: jax.Array, axis: int = -2) -> jax.Array:
+    """Inverse of :func:`pack_int4` → int8 values with sign extension."""
+    axis = axis % p.ndim
+    lo = (p & 0x0F).astype(jnp.int8)
+    hi = ((p >> 4) & 0x0F).astype(jnp.int8)
+    lo = jnp.where(lo > 7, lo - 16, lo)
+    hi = jnp.where(hi > 7, hi - 16, hi)
+    st = jnp.stack([lo, hi], axis=axis + 1)   # [..., n/2, 2, ...]
+    out_shape = p.shape[:axis] + (p.shape[axis] * 2,) + p.shape[axis + 1:]
+    return st.reshape(out_shape)

@@ -1,0 +1,56 @@
+"""Quantization configuration (paper §4 experimental setups).
+
+Two canonical setups from the paper, plus the knobs to express anything on the
+lw/chw/dchw × W-bits × A-bits grid:
+
+- ``deployment_oriented()``: W4A8, layerwise rescale factors → the only vector
+  DoF is the cross-layer activation scale (CLE DoF), trained jointly.
+- ``permissive()``: W4, FP activations, channelwise rescale → doubly-channelwise
+  kernel quantization, two vector DoF per linear.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+
+class Granularity(enum.Enum):
+    LW = "lw"        # scalar rescale factor F̂ per linear (S_wR scalar)
+    CHW = "chw"      # vector F̂ → per-out-channel S_wR
+    DCHW = "dchw"    # chw + live CLE DoF → S_wL ⊗ S_wR (Corollary 2)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    w_bits: int = 4
+    a_bits: int | None = 8            # None → FP activations ("permissive")
+    granularity: Granularity = Granularity.DCHW
+    exempt_bits: int = 8              # bits for exempted (smallest-1%) layers
+    exempt_frac: float = 0.01         # cumulative weight-bytes fraction kept at
+                                      # exempt_bits (paper's flat 1% rule, §4)
+    embed_bits: int = 8               # embedding / LM-head precision
+    act_signed: bool = False          # paper: unsigned 8b activations
+    mmse_iters: int = 10              # PPQ/APQ iterations at init
+
+    @property
+    def swr_per_channel(self) -> bool:
+        return self.granularity is not Granularity.LW
+
+    @property
+    def act_quant(self) -> bool:
+        return self.a_bits is not None
+
+
+def deployment_oriented(**kw) -> QuantConfig:
+    """Paper's 'deployment-oriented' setup: 4b weights, 8b acts, layerwise F̂."""
+    return QuantConfig(w_bits=4, a_bits=8, granularity=Granularity.LW, **kw)
+
+
+def permissive(**kw) -> QuantConfig:
+    """Paper's 'permissive' setup: 4b weights only, doubly-channelwise."""
+    return QuantConfig(w_bits=4, a_bits=None, granularity=Granularity.DCHW, **kw)
+
+
+def unquantized() -> QuantConfig | None:
+    """Teacher / FP reference marker."""
+    return None

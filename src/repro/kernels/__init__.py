@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for QFT's perf-critical compute:
+quant_matmul (deployed W4 matmul), fake_quant (training offline subgraph),
+flash_attention (long-context prefill). ops.py = jit wrappers; ref.py = oracles."""
+from .ops import qlinear_deployed, fused_fake_quant, attention_prefill
+from .quant_matmul import quant_matmul
+from .fake_quant import fake_quant_kernel
+from .flash_attention import flash_attention

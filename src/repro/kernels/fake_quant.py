@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: fused fake-quantization (the QFT training hot-spot).
+
+Every quantized linear in the student runs quantize→dequantize on its full
+weight tensor each step (the offline subgraph).  Fused in VMEM this is one
+elementwise pass: scale-divide, round, clip, scale-multiply — one HBM read +
+one write instead of the 4 intermediate round-trips an unfused chain costs.
+
+Grid tiles rows; (8×128)-lane-aligned blocks.  The backward (STE) reuses the
+same kernel via jax.custom_vjp: grad_x = grad ⊙ 1[|x/s| ≤ qmax];
+grad_s emerges from the offline subgraph as usual (core.dof) — this kernel
+is the *deployed-math* drop-in used inside effective_weight.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fq_kernel(x_ref, s_ref, o_ref, *, qmax: float):
+    x = x_ref[...].astype(jnp.float32)
+    s = s_ref[...].astype(jnp.float32)
+    q = jnp.clip(jnp.round(x / s), -qmax, qmax)
+    o_ref[...] = (q * s).astype(o_ref.dtype)
+
+
+def _fq_fwd_impl(x, scale, bits, br, bc, interpret):
+    qmax = float(2 ** (bits - 1) - 1)
+    R, C = x.shape
+    br, bc = min(br, R), min(bc, C)
+    assert R % br == 0 and C % bc == 0, (R, C, br, bc)
+    return pl.pallas_call(
+        functools.partial(_fq_kernel, qmax=qmax),
+        grid=(R // br, C // bc),
+        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+                  pl.BlockSpec((br, bc), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((R, C), x.dtype),
+        interpret=interpret,
+    )(x, jnp.broadcast_to(scale, x.shape))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def fake_quant_kernel(x: jax.Array, scale: jax.Array, bits: int = 4,
+                      br: int = 256, bc: int = 256, interpret: bool = True
+                      ) -> jax.Array:
+    """STE fake-quant of x (2-D) with broadcastable scale."""
+    return _fq_fwd_impl(x, scale, bits, br, bc, interpret)
+
+
+def _fq_fwd(x, scale, bits, br, bc, interpret):
+    y = _fq_fwd_impl(x, scale, bits, br, bc, interpret)
+    return y, (x, scale)
+
+
+def _fq_bwd(bits, br, bc, interpret, res, g):
+    x, scale = res
+    qmax = float(2 ** (bits - 1) - 1)
+    inside = (jnp.abs(x / scale) <= qmax).astype(g.dtype)
+    gx = g * inside                                   # STE through round&clip
+    # native scale grad (≡ LSQ): d/ds [s·clip(round(x/s))]
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
+    gs_full = g * jnp.where(inside > 0, q - x / scale, q)
+    # reduce to scale's broadcast shape
+    gs = gs_full
+    for ax in range(gs_full.ndim):
+        if scale.shape[ax] == 1 and gs_full.shape[ax] != 1:
+            gs = gs.sum(axis=ax, keepdims=True)
+    return gx, gs.astype(scale.dtype)
+
+
+fake_quant_kernel.defvjp(_fq_fwd, _fq_bwd)

@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: blocked causal attention (online softmax).
+
+Used by the serving path for long-context prefill where materializing
+[S, S] logits would blow HBM.  Standard flash pattern adapted to TPU:
+q tile [bq, hd] stays VMEM-resident across the KV grid dimension; running
+(max, sumexp, out) carried in VMEM scratch; causal block skip via pl.when.
+
+Grid: (batch*heads, S_q/bq, S_k/bk); hd ≤ 256 assumed (fits one lane tile).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               bq: int, bk: int, n_k: int, scale: float, causal: bool):
+    kb = pl.program_id(2)
+    qb = pl.program_id(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _block():
+        q = q_ref[0].astype(jnp.float32) * scale          # [bq, hd]
+        k = k_ref[0].astype(jnp.float32)                  # [bk, hd]
+        v = v_ref[0].astype(jnp.float32)                  # [bk, hd]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # [bq, bk]
+        if causal:
+            rows = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            cols = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(rows >= cols, s, _NEG)
+        m_prev = m_ref[...]                               # [bq, 1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if causal:
+        # skip fully-masked blocks (upper triangle)
+        pl.when(kb * bk <= qb * bq + bq - 1)(_block)
+    else:
+        _block()
+
+    @pl.when(kb == n_k - 1)
+    def _out():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-20)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, bq: int = 256, bk: int = 256,
+                    interpret: bool = True) -> jax.Array:
+    """q,k,v: [BH, S, hd] (batch×heads flattened) → [BH, S, hd]."""
+    BH, S, hd = q.shape
+    Sk = k.shape[1]
+    bq, bk = min(bq, S), min(bk, Sk)
+    assert S % bq == 0 and Sk % bk == 0
+    scale = hd ** -0.5
+    n_k = Sk // bk
+    grid = (BH, S // bq, n_k)
+    return pl.pallas_call(
+        functools.partial(_fa_kernel, bq=bq, bk=bk, n_k=n_k, scale=scale,
+                          causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, hd), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)

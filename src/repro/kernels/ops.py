@@ -1,0 +1,59 @@
+"""jit'd public wrappers over the Pallas kernels.
+
+``use_pallas`` routes between the kernel (TPU / interpret) and the pure-jnp
+reference (XLA path used by the dry-run and CPU smoke runs).  The serving
+engine calls ``qlinear_deployed`` for exported int4 weights.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .fake_quant import fake_quant_kernel
+from .flash_attention import flash_attention
+from .quant_matmul import quant_matmul
+
+
+def qlinear_deployed(x: jax.Array, export: dict, use_pallas: bool = False,
+                     interpret: bool = True) -> jax.Array:
+    """y = x @ dequant(export) (+b).  x: [..., K]; export from dof.export_qlinear."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    s_wl = export.get("s_wl")
+    if s_wl is None:
+        s_wl = jnp.ones((x.shape[-1],), jnp.float32)
+    s_wr = export["s_wr"]
+    if s_wr.ndim == 0:
+        s_wr = jnp.broadcast_to(s_wr, (export["q"].shape[-1],))
+    if use_pallas:
+        y = quant_matmul(x2, export["q"], s_wl, s_wr, interpret=interpret)
+    else:
+        y = ref.quant_matmul_ref(x2, export["q"], s_wl, s_wr)
+    if "b" in export:
+        y = y + export["b"].astype(y.dtype)
+    return y.reshape(*lead, -1)
+
+
+def fused_fake_quant(x: jax.Array, scale: jax.Array, bits: int = 4,
+                     use_pallas: bool = False, interpret: bool = True
+                     ) -> jax.Array:
+    if use_pallas and x.ndim == 2:
+        return fake_quant_kernel(x, jnp.broadcast_to(scale, x.shape),
+                                 bits, 256, 256, interpret)
+    return ref.fake_quant_ref(x, scale, bits)
+
+
+def attention_prefill(q: jax.Array, k: jax.Array, v: jax.Array,
+                      causal: bool = True, use_pallas: bool = False,
+                      interpret: bool = True) -> jax.Array:
+    """q,k,v: [B, S, H, hd] → flash attention over flattened (B·H)."""
+    B, S, H, hd = q.shape
+    qt = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * H, -1, hd)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * H, -1, hd)
+    if use_pallas:
+        o = flash_attention(qt, kt, vt, causal=causal, interpret=interpret)
+    else:
+        o = ref.flash_attention_ref(qt, kt, vt, causal=causal)
+    return o.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: W4 (int4-nibble-packed) dequantize-matmul.
+
+The deployment hot-spot of a QFT-quantized model:  y = x @ (S_wL ⊙ Ŵ ⊙ S_wR)
+with Ŵ stored packed (two int4 per byte) in HBM.  TPU adaptation of the
+paper's recode stage (DESIGN.md §2): unpack + dequantize happen in VMEM on
+MXU-aligned tiles, fused into the matmul's producer — weights never
+materialize in bf16 in HBM, cutting weight-memory traffic ~4× vs bf16.
+
+Tiling: grid (M/bm, N/bn, K/bk); x tile [bm, bk] and packed-weight tile
+[bk/2, bn] are staged into VMEM per step; f32 accumulation in a VMEM scratch
+tile [bm, bn] across the K grid dimension (revisiting pattern), written out
+on the last K step.  bm/bn/bk default to 128/128/256 — MXU-aligned (128) and
+a working set of ~0.3 MB ≪ 16 MB VMEM, leaving room for double-buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _qmm_kernel(x_ref, qw_ref, swl_ref, swr_ref, o_ref, acc_ref, *,
+                n_k: int):
+    """One (m, n, k) grid step.
+
+    x_ref:   [bm, bk]    bf16/f32 activations tile
+    qw_ref:  [bk//2, bn] uint8 packed int4 weights tile
+    swl_ref: [bk, 1]     f32 left scale slice (1/S_a of the input stream)
+    swr_ref: [1, bn]     f32 right scale slice (S_a_out · F̂)
+    o_ref:   [bm, bn]    output tile
+    acc_ref: [bm, bn]    f32 VMEM accumulator scratch
+    """
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    packed = qw_ref[...]
+    lo = (packed & 0x0F).astype(jnp.int8)
+    hi = ((packed >> 4) & 0x0F).astype(jnp.int8)
+    lo = jnp.where(lo > 7, lo - 16, lo)               # sign-extend nibbles
+    hi = jnp.where(hi > 7, hi - 16, hi)
+    bk2, bn = packed.shape
+    w = jnp.stack([lo, hi], axis=1).reshape(bk2 * 2, bn)   # interleave → [bk, bn]
+    w = w.astype(jnp.float32) * swl_ref[...] * swr_ref[...]
+
+    x = x_ref[...].astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k_step == n_k - 1)
+    def _out():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def quant_matmul(x: jax.Array, qw: jax.Array, s_wl: jax.Array,
+                 s_wr: jax.Array, bm: int = 128, bn: int = 128, bk: int = 256,
+                 interpret: bool = True) -> jax.Array:
+    """y = x @ dequant(qw) for int4-packed qw.
+
+    x: [M, K]; qw: [K//2, N] uint8; s_wl: [K] f32; s_wr: [N] f32 → y [M, N].
+    Shapes must tile evenly (callers pad — production shapes are MXU-aligned
+    by construction).  interpret=True validates the kernel body on CPU.
+    """
+    M, K = x.shape
+    Kh, N = qw.shape
+    assert Kh * 2 == K, (K, Kh)
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    n_k = K // bk
+    grid = (M // bm, N // bn, n_k)
+
+    return pl.pallas_call(
+        functools.partial(_qmm_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),
+            pl.BlockSpec((bk // 2, bn), lambda m, n, k: (k, n)),
+            pl.BlockSpec((bk, 1), lambda m, n, k: (k, 0)),
+            pl.BlockSpec((1, bn), lambda m, n, k: (0, n)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, qw, s_wl[:, None], s_wr[None, :])

@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.fakequant import unpack_int4
+
+
+def quant_matmul_ref(x: jax.Array, qw: jax.Array, s_wl: jax.Array,
+                     s_wr: jax.Array) -> jax.Array:
+    w = unpack_int4(qw, axis=0).astype(jnp.float32)
+    w = w * s_wl[:, None] * s_wr[None, :]
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)
+
+
+def fake_quant_ref(x: jax.Array, scale: jax.Array, bits: int) -> jax.Array:
+    qmax = float(2 ** (bits - 1) - 1)
+    xf = x.astype(jnp.float32)
+    s = jnp.broadcast_to(scale, x.shape).astype(jnp.float32)
+    q = jnp.clip(jnp.round(xf / s), -qmax, qmax)
+    return (q * s).astype(x.dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True) -> jax.Array:
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    s = jnp.einsum("bqh,bkh->bqk", qf, kf) * (q.shape[-1] ** -0.5)
+    if causal:
+        Sq, Sk = s.shape[1], s.shape[2]
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", p, vf).astype(q.dtype)

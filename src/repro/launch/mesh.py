@@ -1,0 +1,30 @@
+"""Production mesh definition (assignment-mandated shapes).
+
+Functions, not module-level constants: importing this module never touches
+jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """Single-device mesh for smoke tests / local runs."""
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def make_elastic_mesh(n_devices: int, model_parallel: int = 16):
+    """Largest (data, model) mesh from ``n_devices`` survivors (elastic
+    restarts, train/elastic.py). Drops stragglers that break divisibility."""
+    model_parallel = min(model_parallel, n_devices)
+    data = n_devices // model_parallel
+    return jax.make_mesh((data, model_parallel), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

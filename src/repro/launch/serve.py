@@ -1,0 +1,50 @@
+"""Serving launcher: QFT deployment artifact → batched engine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke
+
+Loads (or initializes) student params, exports the int4-packed artifact and
+serves a demo batch.  Production path shards the exported tree with the same
+policies as the decode dry-run cells.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from ..configs import get_config
+from ..core import permissive
+from ..models import init_model
+from ..serve.engine import Engine, Request, ServeConfig
+from ..train.checkpoint import CheckpointManager
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="restore a QFT-trained student")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    cfg = dataclasses.replace(cfg, scan_layers=False, remat=False)
+    qcfg = permissive()
+    params = init_model(jax.random.PRNGKey(0), cfg, qcfg)
+    if args.ckpt_dir:
+        ckpt = CheckpointManager(args.ckpt_dir)
+        step = ckpt.latest_step()
+        if step is not None:
+            params = ckpt.restore(step, {"student": params})["student"]
+            print(f"restored step {step}")
+
+    engine = Engine(cfg, qcfg, params, ServeConfig(slots=4, max_len=128))
+    outs = engine.generate([Request(prompt=[1, 2, 3], max_new_tokens=8),
+                            Request(prompt=[4, 5], max_new_tokens=8)])
+    for i, o in enumerate(outs):
+        print(f"req{i}: {o}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Quantization-aware model zoo (pure JAX)."""
+from .config import ModelConfig, MoEConfig, MLAConfig, SSMConfig
+from .transformer import init_model, forward, init_cache, set_runtime

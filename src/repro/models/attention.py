@@ -1,0 +1,224 @@
+"""Attention: GQA (+qk-norm, RoPE/M-RoPE, padding-aware) and DeepSeek MLA.
+
+KV caches are explicit pytrees so serve_step can donate them.  Head counts may
+be padded for TP divisibility (extra heads are zero-weighted → exact function
+preservation, DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..core import dof
+from ..core.qconfig import QuantConfig
+from .config import ModelConfig
+from .layers import apply_mrope, apply_rope, rmsnorm, init_rmsnorm
+
+Params = dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# GQA
+# --------------------------------------------------------------------------
+
+def init_attention(key: jax.Array, cfg: ModelConfig,
+                   qcfg: QuantConfig | None) -> Params:
+    d, hd = cfg.d_model, cfg.head_dim
+    H, Hkv = cfg.n_heads_padded, cfg.n_kv_heads_padded
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "wq": dof.init_qlinear(ks[0], d, H * hd, qcfg, bias=cfg.bias),
+        "wk": dof.init_qlinear(ks[1], d, Hkv * hd, qcfg, bias=cfg.bias),
+        "wv": dof.init_qlinear(ks[2], d, Hkv * hd, qcfg, bias=cfg.bias),
+        "wo": dof.init_qlinear(ks[3], H * hd, d, qcfg, bias=False),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd)
+        p["k_norm"] = init_rmsnorm(hd)
+    if qcfg is not None:
+        p["in_stream"] = dof.init_stream(d)        # shared by q,k,v (fan-out)
+        p["out_stream"] = dof.init_stream(H * hd)
+    return p
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, n_layers: int,
+                  dtype=jnp.bfloat16) -> Params:
+    Hkv, hd = cfg.n_kv_heads_padded, cfg.head_dim
+    shape = (n_layers, batch, max_len, Hkv, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool,
+          q_offset: jax.Array | int, kv_len: jax.Array | None = None) -> jax.Array:
+    """q: [B,Sq,H,hd]; k,v: [B,Skv,Hkv,hd] (GQA grouping inside). f32 softmax."""
+    B, Sq, H, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, hd)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32)
+    logits = logits * (hd ** -0.5)
+    pos_q = jnp.asarray(q_offset) + jnp.arange(Sq)
+    pos_k = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask = mask & (pos_q[:, None] >= pos_k[None, :])
+    if kv_len is not None:                       # cached decode: valid prefix
+        mask = mask & (pos_k[None, :] < kv_len)
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def attention(x: jax.Array, p: Params, cfg: ModelConfig,
+              qcfg: QuantConfig | None, positions: jax.Array,
+              cache: Params | None = None, taps: dict | None = None,
+              prefix: str = "") -> tuple[jax.Array, Params | None]:
+    """Returns (out, updated layer cache).  cache leaves: k/v [B, Smax, Hkv, hd]."""
+    B, Sq, _ = x.shape
+    hd = cfg.head_dim
+    H, Hkv = cfg.n_heads_padded, cfg.n_kv_heads_padded
+    ins = p.get("in_stream")
+    q = dof.qlinear(x, p["wq"], qcfg, stream=ins).reshape(B, Sq, H, hd)
+    k = dof.qlinear(x, p["wk"], qcfg, stream=ins).reshape(B, Sq, Hkv, hd)
+    v = dof.qlinear(x, p["wv"], qcfg, stream=ins).reshape(B, Sq, Hkv, hd)
+    if cfg.qk_norm:
+        q, k = rmsnorm(q, p["q_norm"]), rmsnorm(k, p["k_norm"])
+    if cfg.mrope_sections:
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        out = _sdpa(q, k, v, causal=True, q_offset=0)
+        new_cache = None
+    else:
+        pos = cache["pos"]
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, pos, 0, 0))
+        out = _sdpa(q, ck, cv, causal=Sq > 1, q_offset=pos, kv_len=pos + Sq)
+        new_cache = {"k": ck, "v": cv, "pos": pos + Sq}
+    out = out.reshape(B, Sq, H * hd)
+    if taps is not None:
+        from .transformer import _tap
+        _tap(taps, prefix + ".pre_o", out)
+    out = dof.qlinear(out, p["wo"], qcfg, stream=p.get("out_stream"))
+    return out, new_cache
+
+
+# --------------------------------------------------------------------------
+# MLA (DeepSeek-V2): low-rank compressed KV, optional absorbed decode
+# --------------------------------------------------------------------------
+
+def init_mla(key: jax.Array, cfg: ModelConfig,
+             qcfg: QuantConfig | None) -> Params:
+    m, d, H = cfg.mla, cfg.d_model, cfg.n_heads_padded
+    ks = jax.random.split(key, 6)
+    p: Params = {
+        "q_down": dof.init_qlinear(ks[0], d, m.q_lora, qcfg),
+        "q_up": dof.init_qlinear(ks[1], m.q_lora, H * (m.d_nope + m.d_rope), qcfg),
+        "kv_down": dof.init_qlinear(ks[2], d, m.kv_lora + m.d_rope, qcfg),
+        "k_up": dof.init_qlinear(ks[3], m.kv_lora, H * m.d_nope, qcfg),
+        "v_up": dof.init_qlinear(ks[4], m.kv_lora, H * m.d_v, qcfg),
+        "wo": dof.init_qlinear(ks[5], H * m.d_v, d, qcfg),
+        "q_norm": init_rmsnorm(m.q_lora),
+        "kv_norm": init_rmsnorm(m.kv_lora),
+    }
+    if qcfg is not None:
+        p["in_stream"] = dof.init_stream(d)       # shared q_down/kv_down
+        p["q_stream"] = dof.init_stream(m.q_lora)
+        p["kv_stream"] = dof.init_stream(m.kv_lora)  # shared k_up/v_up
+        p["out_stream"] = dof.init_stream(H * m.d_v)
+    return p
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, n_layers: int,
+                   dtype=jnp.bfloat16) -> Params:
+    m = cfg.mla
+    return {"ckv": jnp.zeros((n_layers, batch, max_len, m.kv_lora), dtype),
+            "kr": jnp.zeros((n_layers, batch, max_len, m.d_rope), dtype),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def mla_attention(x: jax.Array, p: Params, cfg: ModelConfig,
+                  qcfg: QuantConfig | None, positions: jax.Array,
+                  cache: Params | None = None) -> tuple[jax.Array, Params | None]:
+    m = cfg.mla
+    B, Sq, _ = x.shape
+    H = cfg.n_heads_padded
+    ins = p.get("in_stream")
+    ql = rmsnorm(dof.qlinear(x, p["q_down"], qcfg, stream=ins), p["q_norm"])
+    q = dof.qlinear(ql, p["q_up"], qcfg, stream=p.get("q_stream"))
+    q = q.reshape(B, Sq, H, m.d_nope + m.d_rope)
+    q_nope, q_rope = q[..., : m.d_nope], q[..., m.d_nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = dof.qlinear(x, p["kv_down"], qcfg, stream=ins)
+    ckv, kr = kv[..., : m.kv_lora], kv[..., m.kv_lora:]
+    ckv = rmsnorm(ckv, p["kv_norm"])
+    kr = apply_rope(kr[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+
+    if cache is not None:
+        pos = cache["pos"]
+        ckv_all = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, pos, 0))
+        kr_all = jax.lax.dynamic_update_slice(
+            cache["kr"], kr.astype(cache["kr"].dtype), (0, pos, 0))
+        new_cache = {"ckv": ckv_all, "kr": kr_all, "pos": pos + Sq}
+        kv_len = pos + Sq
+        q_offset = pos
+    else:
+        ckv_all, kr_all, new_cache, kv_len, q_offset = ckv, kr, None, None, 0
+
+    scale = (m.d_nope + m.d_rope) ** -0.5
+    Skv = ckv_all.shape[1]
+    if cfg.mla_absorb:
+        # ---- absorbed decode (beyond-paper §Perf opt): attention runs in the
+        # compressed latent space; k_up/v_up folded into q / output path.
+        k_up_w = dof.effective_weight(p["k_up"], qcfg,
+                                      None if qcfg is None else p["kv_stream"]["log_sa"],
+                                      compute_dtype=x.dtype)
+        k_up_w = k_up_w.reshape(m.kv_lora, H, m.d_nope)
+        q_c = jnp.einsum("bqhn,chn->bqhc", q_nope, k_up_w)       # [B,Sq,H,kv_lora]
+        logits = (jnp.einsum("bqhc,bsc->bhqs", q_c, ckv_all,
+                             preferred_element_type=jnp.float32)
+                  + jnp.einsum("bqhr,bsr->bhqs", q_rope, kr_all,
+                               preferred_element_type=jnp.float32)) * scale
+    else:
+        k_nope = dof.qlinear(ckv_all, p["k_up"], qcfg,
+                             stream=p.get("kv_stream")).reshape(B, Skv, H, m.d_nope)
+        logits = (jnp.einsum("bqhn,bshn->bhqs", q_nope, k_nope,
+                             preferred_element_type=jnp.float32)
+                  + jnp.einsum("bqhr,bsr->bhqs", q_rope, kr_all,
+                               preferred_element_type=jnp.float32)) * scale
+
+    pos_q = (jnp.asarray(q_offset) if q_offset is not None else 0) + jnp.arange(Sq)
+    pos_k = jnp.arange(Skv)
+    mask = pos_q[:, None] >= pos_k[None, :]
+    if kv_len is not None:
+        mask = mask & (pos_k[None, :] < kv_len)
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+
+    if cfg.mla_absorb:
+        ctx_c = jnp.einsum("bhqs,bsc->bqhc", probs, ckv_all)     # latent context
+        v_up_w = dof.effective_weight(p["v_up"], qcfg,
+                                      None if qcfg is None else p["kv_stream"]["log_sa"],
+                                      compute_dtype=x.dtype)
+        v_up_w = v_up_w.reshape(m.kv_lora, H, m.d_v)
+        ctx = jnp.einsum("bqhc,chv->bqhv", ctx_c, v_up_w)
+    else:
+        v = dof.qlinear(ckv_all, p["v_up"], qcfg,
+                        stream=p.get("kv_stream")).reshape(B, Skv, H, m.d_v)
+        ctx = jnp.einsum("bhqs,bshv->bqhv", probs, v)
+    ctx = ctx.reshape(B, Sq, H * m.d_v)
+    out = dof.qlinear(ctx, p["wo"], qcfg, stream=p.get("out_stream"))
+    return out, new_cache

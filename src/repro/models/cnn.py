@@ -1,0 +1,162 @@
+"""Paper-faithful CNN path: quantized convolutions exactly as analyzed in the
+paper (Fig. 2): kernel scale = S_wL[c_in] ⊗ S_wR[c_out], spatially invariant
+(footnote 1), streams on every conv input, backbone features = pre-pooling
+activations (the paper's distillation point).
+
+Used by the figure/table-level validation benchmarks; BatchNorm is assumed
+folded (weights arrive pre-folded, as in the paper's tflite/onnx setting).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..core import dof
+from ..core.fakequant import fake_quant
+from ..core.mmse import apq_scales, ppq_scale
+from ..core.qconfig import QuantConfig
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    name: str
+    channels: tuple[int, ...] = (16, 32, 64)
+    n_classes: int = 10
+    img_hw: int = 16
+    in_ch: int = 3
+    kernel: int = 3
+    family: str = "cnn"
+
+
+def init_qconv(key, kh, kw, cin, cout, cfg: QuantConfig | None) -> Params:
+    std = (kh * kw * cin) ** -0.5
+    p: Params = {"w": jax.random.normal(key, (kh, kw, cin, cout)) * std,
+                 "b": jnp.zeros((cout,))}
+    if cfg is not None:
+        # the recode factor F̂ (Eq. 2): scalar for layerwise HW, vector chw
+        p["log_f"] = jnp.zeros((cout,) if cfg.swr_per_channel else (),
+                               jnp.float32)
+    return p
+
+
+def conv_weight_scale(p: Params, log_sa_in: jax.Array | None,
+                      log_sa_out: jax.Array | None) -> jax.Array:
+    """Full Eq. 2 coupling: S_w = (1/S_a_in)[c_in] ⊗ (S_a_out·F̂)[c_out].
+
+    Both stream scales are DoF shared with neighboring convs — the paper's
+    chain: raising S_a^l gives the producer's out-channel AND the consumer's
+    in-channel a coarser grid together (the CLE coupling, Corollary 1).
+    """
+    log_f = p["log_f"]
+    log_f = log_f if log_f.ndim else log_f[None]
+    log_swr = log_f + (log_sa_out if log_sa_out is not None else 0.0)
+    s = jnp.exp(log_swr)[None, None, None, :]
+    if log_sa_in is not None:
+        s = s * jnp.exp(-log_sa_in)[None, None, :, None]
+    return s
+
+
+def qconv(x, p: Params, cfg: QuantConfig | None, stream: Params | None = None,
+          stream_out: Params | None = None, stride: int = 1,
+          bits: int | None = None) -> jax.Array:
+    log_sa = None
+    if stream is not None and cfg is not None:
+        x = dof.stream_fake_quant(x, stream, cfg)
+        log_sa = stream["log_sa"]
+    log_sa_out = None if (stream_out is None or cfg is None)         else stream_out["log_sa"]
+    w = p["w"]
+    if cfg is not None:
+        w = fake_quant(w, conv_weight_scale(p, log_sa, log_sa_out),
+                       bits or cfg.w_bits)
+    y = jax.lax.conv_general_dilated(
+        x, w.astype(x.dtype), (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"].astype(y.dtype)
+
+
+def mmse_init_qconv(p: Params, cfg: QuantConfig,
+                    log_sa_in: jax.Array | None = None,
+                    log_sa_out: jax.Array | None = None) -> Params:
+    """Fit F̂ by inverting Eq. 2 (paper §4): the total grid is
+    S_wL ⊗ (S_a_out·F̂); PPQ runs on W' = W·S_a_in[c_in]/S_a_out[c_out]."""
+    w = p["w"]
+    if log_sa_in is not None:
+        w = w * jnp.exp(log_sa_in)[None, None, :, None]
+    if log_sa_out is not None:
+        w = w / jnp.exp(log_sa_out)[None, None, None, :]
+    w2 = w.reshape(-1, w.shape[-1])
+    if cfg.swr_per_channel:
+        f = ppq_scale(w2, cfg.w_bits, axes=(0,), iters=cfg.mmse_iters)[0]
+    else:
+        f = ppq_scale(w2, cfg.w_bits, axes=None, iters=cfg.mmse_iters).reshape(())
+    return {**p, "log_f": jnp.log(jnp.maximum(f, 1e-12))}
+
+
+def apq_init_qconv(p: Params, cfg: QuantConfig) -> tuple[Params, jax.Array]:
+    """Doubly-channelwise init: APQ over the [kh*kw*cin?, cout] view.
+
+    The paper's dCh conv quantization scales rows=c_in, cols=c_out; spatial
+    taps share the c_in scale (HW invariance).  We fold spatial into rows
+    blockwise by averaging the per-(spatial,cin) row scale over spatial.
+    """
+    kh, kw, cin, cout = p["w"].shape
+    # per-cin row scale via PPQ on rows; per-cout via APQ on the 2D fold
+    s, t = apq_scales(p["w"].reshape(-1, cout), cfg.w_bits, cfg.mmse_iters)
+    log_swl_full = jnp.log(s[:, 0]).reshape(kh, kw, cin)
+    log_swl = jnp.mean(log_swl_full, axis=(0, 1))
+    return ({**p, "log_f": jnp.log(t[0, :])}, log_swl)
+
+
+def init_cnn(key, ccfg: CNNConfig, qcfg: QuantConfig | None) -> Params:
+    ks = jax.random.split(key, len(ccfg.channels) + 1)
+    params: Params = {"convs": [], "streams": []}
+    cin = ccfg.in_ch
+    convs, streams = [], []
+    for i, cout in enumerate(ccfg.channels):
+        convs.append(init_qconv(ks[i], ccfg.kernel, ccfg.kernel, cin, cout, qcfg))
+        streams.append(dof.init_stream(cin) if qcfg is not None else {})
+        cin = cout
+    params["convs"] = convs
+    params["streams"] = streams
+    params["fc"] = dof.init_qlinear(ks[-1], cin, ccfg.n_classes, qcfg,
+                                    bias=True,
+                                    w_bits=None if qcfg is None else qcfg.exempt_bits)
+    if qcfg is not None:
+        params["fc_stream"] = dof.init_stream(cin)
+    return params
+
+
+def forward_cnn(params: Params, ccfg: CNNConfig, qcfg: QuantConfig | None,
+                x: jax.Array, collect_taps: bool = False) -> dict[str, Any]:
+    """x: [B, H, W, C]. Returns {features (pre-pool), pooled, logits, taps}."""
+    taps: dict | None = {} if collect_taps else None
+    n_convs = len(params["convs"])
+    for i, (cp, st) in enumerate(zip(params["convs"], params["streams"])):
+        if taps is not None:
+            xf = x.astype(jnp.float32).reshape(-1, x.shape[-1])
+            taps[f"conv{i}.in"] = {"min": jnp.min(xf, 0), "max": jnp.max(xf, 0),
+                                   "mean": jnp.mean(xf, 0)}
+        if qcfg is None:
+            st_out = None
+        elif i + 1 < n_convs:
+            st_out = params["streams"][i + 1]      # chained (Eq. 2)
+        else:
+            st_out = params.get("fc_stream")
+        x = qconv(x, cp, qcfg, stream=st if qcfg is not None else None,
+                  stream_out=st_out, stride=2 if i else 1)
+        x = jax.nn.relu(x)
+        if taps is not None:
+            xf = x.astype(jnp.float32).reshape(-1, x.shape[-1])
+            taps[f"conv{i}.out"] = {"min": jnp.min(xf, 0), "max": jnp.max(xf, 0),
+                                    "mean": jnp.mean(xf, 0)}
+    feats = x                                # backbone output (paper's KD point)
+    pooled = jnp.mean(x, axis=(1, 2))        # global average pool
+    logits = dof.qlinear(pooled, params["fc"], qcfg,
+                         stream=params.get("fc_stream"),
+                         bits=None if qcfg is None else qcfg.exempt_bits)
+    return {"features": feats, "pooled": pooled, "logits": logits, "taps": taps}

@@ -1,0 +1,125 @@
+"""Shared layer primitives (pure JAX, quantization-aware via core.dof).
+
+Every linear goes through ``core.dof.qlinear`` so the offline subgraph (scale
+DoF → effective weights) is part of the forward graph; passing qcfg=None gives
+the FP teacher path with the *same* code.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..core import dof
+from ..core.qconfig import QuantConfig
+
+Params = dict[str, Any]
+
+
+# ----------------------------- norms ------------------------------------
+
+def init_rmsnorm(dim: int) -> Params:
+    return {"g": jnp.ones((dim,), dtype=jnp.float32)}
+
+
+def rmsnorm(x: jax.Array, p: Params, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["g"]
+    return out.astype(x.dtype)
+
+
+# ----------------------------- RoPE -------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, hd]; positions: [B, S] (int)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, S, hd/2]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections: tuple[int, ...]) -> jax.Array:
+    """M-RoPE (Qwen2-VL): positions [B, 3, S] for (t, h, w); ``sections`` split
+    the half-dim frequency bands across the three position streams."""
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    # pick the position stream per frequency band
+    sec_id = jnp.repeat(jnp.arange(len(sections)),
+                        jnp.array(sections), total_repeat_length=hd // 2)
+    pos = jnp.take_along_axis(
+        positions.astype(jnp.float32),                  # [B, 3, S]
+        jnp.broadcast_to(sec_id[None, :, None],
+                         (positions.shape[0], hd // 2, positions.shape[-1])),
+        axis=1)                                         # [B, hd/2, S]
+    ang = jnp.swapaxes(pos, 1, 2)[..., :] * freqs       # [B, S, hd/2]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------- MLP --------------------------------------
+
+def init_mlp(key: jax.Array, d: int, ff: int, qcfg: QuantConfig | None,
+             mlp_type: str, bias: bool, bits: int | None = None) -> Params:
+    ks = jax.random.split(key, 3)
+    p: Params = {
+        "up": dof.init_qlinear(ks[0], d, ff, qcfg, bias=bias, w_bits=bits),
+        "down": dof.init_qlinear(ks[1], ff, d, qcfg, bias=bias, w_bits=bits),
+    }
+    if mlp_type == "swiglu":
+        p["gate"] = dof.init_qlinear(ks[2], d, ff, qcfg, bias=bias, w_bits=bits)
+    if qcfg is not None:
+        p["in_stream"] = dof.init_stream(d)    # shared by gate&up (fan-out rule)
+        p["act_stream"] = dof.init_stream(ff)
+    return p
+
+
+def mlp(x: jax.Array, p: Params, qcfg: QuantConfig | None,
+        mlp_type: str, taps: dict | None = None, prefix: str = "") -> jax.Array:
+    ins = p.get("in_stream")
+    acts = p.get("act_stream")
+    up = dof.qlinear(x, p["up"], qcfg, stream=ins)
+    if mlp_type == "swiglu":
+        gate = dof.qlinear(x, p["gate"], qcfg, stream=ins)
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    if taps is not None:
+        from .transformer import _tap
+        _tap(taps, prefix + ".act", h)
+    return dof.qlinear(h, p["down"], qcfg, stream=acts)
+
+
+# ----------------------------- embeddings -------------------------------
+
+def init_embed(key: jax.Array, vocab: int, d: int,
+               qcfg: QuantConfig | None) -> Params:
+    p: Params = {"w": jax.random.normal(key, (vocab, d), jnp.float32) * 0.02}
+    if qcfg is not None:
+        # per-row (token) scale: embedding tables quantize at embed_bits
+        p["log_s"] = jnp.full((vocab, 1), jnp.log(0.02 / 127.0), jnp.float32)
+    return p
+
+
+def embed_lookup(tokens: jax.Array, p: Params, qcfg: QuantConfig | None,
+                 dtype=jnp.bfloat16) -> jax.Array:
+    w = p["w"]
+    if qcfg is not None:
+        from ..core.fakequant import fake_quant
+        w = fake_quant(w, jnp.exp(p["log_s"]), qcfg.embed_bits, signed=True)
+    return jnp.take(w, tokens, axis=0).astype(dtype)

@@ -1,0 +1,167 @@
+"""Mixture-of-Experts with quantized experts and expert parallelism.
+
+Dispatch modes:
+- ``sorted``: production path — top-k token-choice routing, sort-based capacity
+  dispatch (O(T·k) memory, no [T,E,C] one-hot), differentiable w.r.t. tokens
+  and gates.  Runs identically on 1 device or inside the EP shard_map
+  (sharding/ep.py) where buffers are exchanged with all-to-all on the model axis.
+- ``dense``: reference oracle for tests/smoke — every expert applied to every
+  token, combined with gate weights.  Exact (no capacity drops).
+
+Experts are stacked [E, d_in, d_out] and quantized doubly-channelwise per
+expert; all experts share the input-stream scale DoF (paper's fan-out rule,
+Appendix D constraint 2).  Router stays 8-bit (1%-smallest policy).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..core import dof
+from ..core.qconfig import QuantConfig
+from .config import ModelConfig
+
+Params = dict[str, Any]
+
+
+def init_moe(key: jax.Array, cfg: ModelConfig, qcfg: QuantConfig | None) -> Params:
+    e, d = cfg.moe, cfg.d_model
+    E = e.n_experts_padded
+    ff = e.d_ff_expert
+    ks = jax.random.split(key, 7)
+    p: Params = {
+        "router": dof.init_qlinear(ks[0], d, E, qcfg, w_bits=e.router_bits),
+        "up": dof.init_qlinear(ks[1], d, ff, qcfg, expert_dim=E),
+        "gate": dof.init_qlinear(ks[2], d, ff, qcfg, expert_dim=E),
+        "down": dof.init_qlinear(ks[3], ff, d, qcfg, expert_dim=E),
+    }
+    if e.n_shared:
+        p["shared_up"] = dof.init_qlinear(ks[4], d, ff * e.n_shared, qcfg)
+        p["shared_gate"] = dof.init_qlinear(ks[5], d, ff * e.n_shared, qcfg)
+        p["shared_down"] = dof.init_qlinear(ks[6], ff * e.n_shared, d, qcfg)
+    if qcfg is not None:
+        p["in_stream"] = dof.init_stream(d)       # shared: router+all experts
+        p["act_stream"] = dof.init_stream(ff)     # shared across experts
+        if e.n_shared:
+            p["shared_act_stream"] = dof.init_stream(ff * e.n_shared)
+    return p
+
+
+def _router_probs(x: jax.Array, p: Params, cfg: ModelConfig,
+                  qcfg: QuantConfig | None) -> jax.Array:
+    e = cfg.moe
+    logits = dof.qlinear(x, p["router"], qcfg, stream=p.get("in_stream"),
+                         bits=e.router_bits)
+    logits = logits.astype(jnp.float32)
+    if e.n_experts_padded != e.n_experts:          # mask padding experts
+        neg = jnp.full((e.n_experts_padded - e.n_experts,), -1e30, jnp.float32)
+        logits = logits.at[..., e.n_experts:].set(neg)
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def _expert_ffn(h: jax.Array, p: Params, cfg: ModelConfig,
+                qcfg: QuantConfig | None) -> jax.Array:
+    """h: [E, C, d] -> [E, C, d] through stacked quantized expert FFNs."""
+    ins = p.get("in_stream")
+    log_sa = None if ins is None else ins["log_sa"]
+    if qcfg is not None:
+        h = dof.stream_fake_quant(h, ins, qcfg)
+    w_up = dof.effective_weight(p["up"], qcfg, log_sa, h.dtype)
+    w_gate = dof.effective_weight(p["gate"], qcfg, log_sa, h.dtype)
+    a = jax.nn.silu(jnp.einsum("ecd,edf->ecf", h, w_gate)) * \
+        jnp.einsum("ecd,edf->ecf", h, w_up)
+    acts = p.get("act_stream")
+    if qcfg is not None:
+        a = dof.stream_fake_quant(a, acts, qcfg)
+    w_down = dof.effective_weight(
+        p["down"], qcfg, None if acts is None else acts["log_sa"], h.dtype)
+    return jnp.einsum("ecf,efd->ecd", a, w_down)
+
+
+def moe_dense(x: jax.Array, p: Params, cfg: ModelConfig,
+              qcfg: QuantConfig | None) -> jax.Array:
+    """Oracle: all experts on all tokens. x: [T, d]."""
+    e = cfg.moe
+    probs = _router_probs(x, p, cfg, qcfg)                    # [T, E]
+    topv, topi = jax.lax.top_k(probs, e.top_k)
+    gates = topv / jnp.maximum(jnp.sum(topv, -1, keepdims=True), 1e-9)
+    mask = jnp.zeros_like(probs).at[
+        jnp.arange(x.shape[0])[:, None], topi].set(gates)     # [T, E]
+    E = e.n_experts_padded
+    h = jnp.broadcast_to(x[None], (E,) + x.shape)             # [E, T, d]
+    y = _expert_ffn(h, p, cfg, qcfg)                          # [E, T, d]
+    return jnp.einsum("te,etd->td", mask.astype(y.dtype), y)
+
+
+def moe_sorted(x: jax.Array, p: Params, cfg: ModelConfig,
+               qcfg: QuantConfig | None,
+               expert_fn=None) -> jax.Array:
+    """Sort-based capacity dispatch. x: [T, d].
+
+    ``expert_fn(h_ECd) -> y_ECd`` lets sharding/ep.py swap in the all-to-all
+    EP execution while reusing this exact routing/dispatch code.
+    """
+    e = cfg.moe
+    T, d = x.shape
+    E, K = e.n_experts_padded, e.top_k
+    C = max(int(T * K / max(e.n_experts, 1) * e.capacity_factor), 1)
+
+    probs = _router_probs(x, p, cfg, qcfg)                    # [T, E]
+    topv, topi = jax.lax.top_k(probs, K)                      # [T, K]
+    gates = topv / jnp.maximum(jnp.sum(topv, -1, keepdims=True), 1e-9)
+
+    flat_e = topi.reshape(-1)                                 # [T*K]
+    flat_g = gates.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T), K)
+    order = jnp.argsort(flat_e, stable=True)                  # group by expert
+    e_sorted, t_sorted, g_sorted = flat_e[order], flat_t[order], flat_g[order]
+    counts = jnp.bincount(flat_e, length=E)
+    offsets = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                               jnp.cumsum(counts)[:-1]])
+    pos_in_e = jnp.arange(T * K) - offsets[e_sorted]          # slot within expert
+    keep = pos_in_e < C
+    dest = jnp.where(keep, e_sorted * C + pos_in_e, E * C)    # E*C = drop slot
+
+    buf = jnp.zeros((E * C + 1, d), x.dtype).at[dest].set(
+        x[t_sorted], mode="drop")
+    y = (expert_fn or (lambda h: _expert_ffn(h, p, cfg, qcfg)))(
+        buf[:-1].reshape(E, C, d))
+    y = y.reshape(E * C, d)
+    # combine: gather back each kept assignment, weight by gate, sum over K
+    y_tok = jnp.where(keep[:, None], y[jnp.clip(dest, 0, E * C - 1)], 0.0)
+    out = jnp.zeros((T, d), y.dtype).at[t_sorted].add(
+        y_tok * g_sorted[:, None].astype(y.dtype))
+    return out
+
+
+def moe_block(x: jax.Array, p: Params, cfg: ModelConfig,
+              qcfg: QuantConfig | None, mode: str = "sorted",
+              expert_fn=None, moe_fn=None) -> jax.Array:
+    """x: [B, S, d] → routed experts + shared experts.
+
+    ``moe_fn``: optional EP shard_map override (sharding/ep.py); may return
+    None (e.g. decode steps) to fall back to the in-graph path.
+    """
+    B, S, d = x.shape
+    out = None
+    if moe_fn is not None:
+        y = moe_fn(x, p)
+        if y is not None:
+            out = y
+    if out is None:
+        xt = x.reshape(B * S, d)
+        if mode == "dense":
+            routed = moe_dense(xt, p, cfg, qcfg)
+        else:
+            routed = moe_sorted(xt, p, cfg, qcfg, expert_fn=expert_fn)
+        out = routed.reshape(B, S, d)
+    if cfg.moe.n_shared:
+        ins = p.get("in_stream")
+        gate = dof.qlinear(x, p["shared_gate"], qcfg, stream=ins)
+        up = dof.qlinear(x, p["shared_up"], qcfg, stream=ins)
+        h = jax.nn.silu(gate) * up
+        out = out + dof.qlinear(h, p["shared_down"], qcfg,
+                                stream=p.get("shared_act_stream"))
+    return out

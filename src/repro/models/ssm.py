@@ -1,0 +1,210 @@
+"""Mamba2 (SSD — state-space duality) block, quantization-aware.
+
+Chunked SSD for train/prefill (intra-chunk quadratic term + inter-chunk state
+recurrence via lax.scan over chunks), O(1)-state recurrent step for decode.
+Projections (in/out) are quantized linears; the SSD scan itself runs in
+higher precision (paper §3.4 case 2: 'non-arithmetic'/non-affine elements keep
+non-parametric scale relations — on TPU we keep the recurrence in bf16/f32).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..core import dof
+from ..core.qconfig import QuantConfig
+from .config import ModelConfig
+
+Params = dict[str, Any]
+
+
+def init_ssm(key: jax.Array, cfg: ModelConfig, qcfg: QuantConfig | None) -> Params:
+    s, d = cfg.ssm, cfg.d_model
+    di, nh = s.d_inner(d), s.n_heads(d)
+    conv_dim = di + 2 * s.n_groups * s.d_state
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        # in_proj → [z(di), x(di), B(g*ds), C(g*ds), dt(nh)]
+        "in_proj": dof.init_qlinear(
+            ks[0], d, 2 * di + 2 * s.n_groups * s.d_state + nh, qcfg),
+        "conv_w": jax.random.normal(ks[1], (s.d_conv, conv_dim), jnp.float32) * 0.2,
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_g": jnp.ones((di,), jnp.float32),
+        "out_proj": dof.init_qlinear(ks[3], di, d, qcfg),
+    }
+    if qcfg is not None:
+        p["in_stream"] = dof.init_stream(d)
+        p["out_stream"] = dof.init_stream(di)
+    return p
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, n_layers: int,
+                   dtype=jnp.float32) -> Params:
+    s = cfg.ssm
+    d = cfg.d_model
+    di, nh = s.d_inner(d), s.n_heads(d)
+    conv_dim = di + 2 * s.n_groups * s.d_state
+    return {
+        "ssm_state": jnp.zeros((n_layers, batch, nh, s.head_dim, s.d_state), dtype),
+        "conv_state": jnp.zeros((n_layers, batch, s.d_conv - 1, conv_dim), dtype),
+    }
+
+
+def _split_proj(zxbcdt: jax.Array, cfg: ModelConfig):
+    s, d = cfg.ssm, cfg.d_model
+    di, nh, g, ds = s.d_inner(d), s.n_heads(d), s.n_groups, s.d_state
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di: di + di + 2 * g * ds]
+    dt = zxbcdt[..., -nh:]
+    return z, xbc, dt
+
+
+def _gated_norm(y: jax.Array, z: jax.Array, g: jax.Array) -> jax.Array:
+    yf = (y * jax.nn.silu(z)).astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + 1e-6) * g).astype(y.dtype)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, chunk: int,
+                init_state: jax.Array | None = None
+                ) -> tuple[jax.Array, jax.Array]:
+    """SSD scan. x:[B,S,H,P] dt:[B,S,H] A:[H] B,C:[B,S,G,N]  (G divides H).
+
+    Returns (y [B,S,H,P], final_state [B,H,P,N]).
+    """
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    rep = H // G
+    Bm = jnp.repeat(Bm, rep, axis=2)                          # [B,S,H,N]
+    Cm = jnp.repeat(Cm, rep, axis=2)
+
+    def r(t, shape):  # reshape into chunks
+        return t.reshape((Bsz, nc, chunk) + shape)
+
+    xc, dtc = r(x, (H, P)), r(dt.astype(jnp.float32), (H,))
+    Bc, Cc = r(Bm, (H, N)), r(Cm, (H, N))
+    dA = dtc * A.astype(jnp.float32)[None, None, None, :]     # [B,nc,Q,H] (<0)
+    dA_cs = jnp.cumsum(dA, axis=2)                            # within-chunk cumsum
+
+    # intra-chunk (causal masked quadratic term); mask the exponent BEFORE exp
+    # (upper-triangle exponents are positive → inf, and inf*0 NaNs the VJP)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, :, :, None]
+    seg = dA_cs[:, :, :, None, :] - dA_cs[:, :, None, :, :]   # [B,nc,Q,Q,H]
+    decay = jnp.exp(jnp.where(causal, seg, -jnp.inf))
+    cb = jnp.einsum("bnqhs,bnkhs->bnqkh", Cc, Bc,
+                    preferred_element_type=jnp.float32)       # [B,nc,Q,Q,H]
+    att = jnp.where(causal, cb * decay, 0.0)
+    y_diag = jnp.einsum("bnqkh,bnkh,bnkhp->bnqhp", att, dtc,
+                        xc.astype(jnp.float32))
+
+    # chunk-boundary states:  sum_k B_k dt_k x_k decay(to end of chunk)
+    decay_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)          # [B,nc,Q,H]
+    states = jnp.einsum("bnkh,bnkhs,bnkhp->bnhps",
+                        dtc * decay_end, Bc.astype(jnp.float32),
+                        xc.astype(jnp.float32))               # [B,nc,H,P,N]
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])                 # [B,nc,H]
+    s0 = (jnp.zeros((Bsz, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(carry, inp):
+        st, dec = inp
+        new = carry * dec[:, :, None, None] + st
+        return new, carry                                      # emit state BEFORE chunk
+
+    final, prev_states = jax.lax.scan(
+        step, s0, (jnp.swapaxes(states, 0, 1), jnp.swapaxes(chunk_decay, 0, 1)))
+    prev_states = jnp.swapaxes(prev_states, 0, 1)             # [B,nc,H,P,N]
+
+    # inter-chunk contribution
+    decay_in = jnp.exp(dA_cs)                                 # decay from chunk start
+    y_off = jnp.einsum("bnqhs,bnqh,bnhps->bnqhp",
+                       Cc.astype(jnp.float32), decay_in, prev_states)
+    y = (y_diag + y_off).reshape(Bsz, S, H, P).astype(x.dtype)
+    return y, final
+
+
+def ssm_block(x: jax.Array, p: Params, cfg: ModelConfig,
+              qcfg: QuantConfig | None,
+              cache: Params | None = None, taps: dict | None = None,
+              prefix: str = "") -> tuple[jax.Array, Params | None]:
+    """Full Mamba2 block. x: [B, S, d].  cache: {ssm_state, conv_state}/layer."""
+    s = cfg.ssm
+    B, S, d = x.shape
+    di, nh = s.d_inner(d), s.n_heads(d)
+    g, ds, P = s.n_groups, s.d_state, s.head_dim
+
+    zxbcdt = dof.qlinear(x, p["in_proj"], qcfg, stream=p.get("in_stream"))
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])                                  # [H] < 0
+
+    if cache is None or S > 1:
+        # causal depthwise conv1d; cached prefill uses conv_state as context
+        if cache is None:
+            ctx = jnp.zeros((B, s.d_conv - 1, xbc.shape[-1]), xbc.dtype)
+        else:
+            ctx = cache["conv_state"].astype(xbc.dtype)
+        xb_pad = jnp.concatenate([ctx, xbc], axis=1)
+        conv = sum(xb_pad[:, i: i + S] * p["conv_w"][i].astype(xbc.dtype)
+                   for i in range(s.d_conv))
+        conv = jax.nn.silu(conv + p["conv_b"].astype(xbc.dtype))
+        # pad sequence to a chunk multiple; dt=0 on padding → no state effect
+        chunk = min(s.chunk, S)
+        Sp = ((S + chunk - 1) // chunk) * chunk
+        if Sp != S:
+            conv = jnp.pad(conv, ((0, 0), (0, Sp - S), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, Sp - S), (0, 0)))
+        xi = conv[..., :di].reshape(B, Sp, nh, P)
+        Bm = conv[..., di: di + g * ds].reshape(B, Sp, g, ds)
+        Cm = conv[..., di + g * ds:].reshape(B, Sp, g, ds)
+        init_state = None if cache is None else cache["ssm_state"]
+        y, final = ssd_chunked(xi, dt, A, Bm, Cm, chunk, init_state=init_state)
+        y = y + xi * p["D"][None, None, :, None].astype(y.dtype)
+        y = y[:, :S]
+        if cache is None:
+            new_cache = None
+        else:
+            new_cache = {
+                "ssm_state": final.astype(cache["ssm_state"].dtype),
+                "conv_state": xb_pad[:, S: S + s.d_conv - 1].astype(
+                    cache["conv_state"].dtype)}
+    else:
+        conv_state = cache["conv_state"]                      # [B, d_conv-1, cd]
+        window = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)
+        conv = jnp.einsum("bkc,kc->bc", window,
+                          p["conv_w"].astype(xbc.dtype)) + p["conv_b"].astype(xbc.dtype)
+        conv = jax.nn.silu(conv)[:, None]                     # [B,1,cd]
+        xi = conv[..., :di].reshape(B, nh, P)
+        Bm = jnp.repeat(conv[..., di: di + g * ds].reshape(B, g, ds),
+                        nh // g, axis=1)                      # [B,H,N]
+        Cm = jnp.repeat(conv[..., di + g * ds:].reshape(B, g, ds),
+                        nh // g, axis=1)
+        dt1 = dt[:, 0]                                        # [B,H]
+        st = cache["ssm_state"].astype(jnp.float32)           # [B,H,P,N]
+        dec = jnp.exp(dt1 * A[None, :])                       # [B,H]
+        st_new = (st * dec[:, :, None, None]
+                  + jnp.einsum("bh,bhn,bhp->bhpn", dt1, Bm.astype(jnp.float32),
+                               xi.astype(jnp.float32)))
+        y = jnp.einsum("bhn,bhpn->bhp", Cm.astype(jnp.float32), st_new)
+        y = (y + xi.astype(jnp.float32) * p["D"][None, :, None])[:, None]
+        y = y.astype(x.dtype).reshape(B, 1, nh, P)
+        new_cache = {"ssm_state": st_new.astype(cache["ssm_state"].dtype),
+                     "conv_state": window[:, 1:].astype(cache["conv_state"].dtype)}
+
+    y = y.reshape(B, S, di)
+    y = _gated_norm(y, z, p["norm_g"])
+    if taps is not None:
+        from .transformer import _tap
+        _tap(taps, prefix + ".out", y)
+    out = dof.qlinear(y, p["out_proj"], qcfg, stream=p.get("out_stream"))
+    return out, new_cache

@@ -1,0 +1,81 @@
+"""Adam + the paper's cosine-with-reloads schedule (pure JAX, no optax).
+
+Paper §4: "adam optimizer and cosine learning rate schedule, decaying across
+4 epochs starting from 1e-4 and reloading at /2 (i.e. 5e-5, 2.5e-5 @
+epoch=4,8)", 12 epochs total, no regularization.
+
+``state_dtype`` lets 100B+ QFT runs keep m/v in bf16 (distributed-fitting
+trick recorded in EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_reload_schedule(base_lr: float = 1e-4, steps_per_cycle: int = 1000,
+                           n_cycles: int = 3, reload_factor: float = 0.5):
+    """lr(t): cosine decay over each cycle; each reload halves the peak."""
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        cycle = jnp.minimum(step // steps_per_cycle, n_cycles - 1)
+        t = (step - cycle * steps_per_cycle) / steps_per_cycle
+        t = jnp.clip(t, 0.0, 1.0)
+        peak = base_lr * (reload_factor ** cycle)
+        return 0.5 * peak * (1.0 + jnp.cos(jnp.pi * t))
+    return lr
+
+
+@dataclasses.dataclass(frozen=True)
+class Adam:
+    lr: Any = 1e-4                     # float or callable(step) -> lr
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    grad_clip: float | None = None
+    state_dtype: Any = jnp.float32     # bf16 option for 100B+ models
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros(p.shape, self.state_dtype)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        if self.grad_clip is not None:
+            gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                              for g in jax.tree.leaves(grads)) + 1e-16)
+            scale = jnp.minimum(1.0, self.grad_clip / gn)
+            grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m_new = self.b1 * m.astype(jnp.float32) + (1 - self.b1) * gf
+            v_new = self.b2 * v.astype(jnp.float32) + (1 - self.b2) * gf * gf
+            mhat = m_new / (1 - self.b1 ** step.astype(jnp.float32))
+            vhat = v_new / (1 - self.b2 ** step.astype(jnp.float32))
+            p_new = p - lr * mhat / (jnp.sqrt(vhat) + self.eps)
+            return (p_new.astype(p.dtype), m_new.astype(self.state_dtype),
+                    v_new.astype(self.state_dtype))
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_params = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v, "step": step}
+
+
+def paper_recipe(steps_per_epoch: int, epochs_per_cycle: int = 4,
+                 base_lr: float = 1e-4, state_dtype=jnp.float32) -> Adam:
+    """The exact QFT hyperparameters from the paper (§4)."""
+    return Adam(lr=cosine_reload_schedule(
+        base_lr, steps_per_cycle=steps_per_epoch * epochs_per_cycle,
+        n_cycles=3), state_dtype=state_dtype)

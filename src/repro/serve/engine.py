@@ -1,0 +1,90 @@
+"""Batched serving engine for QFT-quantized models.
+
+Continuous-batching-lite: a request pool is packed into a fixed-shape slot
+batch (padded), prefilled once per admission wave, then decoded step-by-step
+with donated caches.  Weights are the deployment artifact (int4-packed) from
+serve/deploy.py; on TPU the matmuls route through kernels/quant_matmul.
+
+Greedy decoding; per-slot stop handling; slots are recycled when a sequence
+finishes (new requests admitted at the next wave boundary).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..core.qconfig import QuantConfig
+from ..models import forward, init_cache
+from ..models.config import ModelConfig
+from .deploy import deploy_view, export_for_layers
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: list[int]
+    max_new_tokens: int = 32
+    eos_id: int = -1                  # -1: never stop early
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    slots: int = 8                    # fixed decode batch
+    max_len: int = 512
+    prefill_chunk: int = 128          # prompts padded to this
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, qcfg: QuantConfig, student_params,
+                 scfg: ServeConfig = ServeConfig()):
+        self.cfg = cfg
+        self.scfg = scfg
+        self.qcfg = qcfg
+        exported = jax.jit(lambda p: export_for_layers(p, qcfg))(student_params)
+        self.params = jax.jit(lambda e: deploy_view(e, qcfg))(exported)
+        self.exported = exported
+
+        def _prefill(params, cache, tokens):
+            out = forward(params, cfg, None, {"tokens": tokens}, cache=cache)
+            return out["logits"][:, -1], out["cache"]
+
+        def _decode(params, cache, tokens):
+            out = forward(params, cfg, None, {"tokens": tokens}, cache=cache)
+            return out["logits"][:, -1], out["cache"]
+
+        self._prefill = jax.jit(_prefill, donate_argnums=(1,))
+        self._decode = jax.jit(_decode, donate_argnums=(1,))
+
+    def generate(self, requests: list[Request]) -> list[list[int]]:
+        """Serve a wave of requests (≤ slots), batched."""
+        scfg = self.scfg
+        n = len(requests)
+        assert n <= scfg.slots
+        # pad prompts to a common chunk length (left-pad with 0)
+        plen = max(len(r.prompt) for r in requests)
+        plen = min(((plen + 7) // 8) * 8, scfg.prefill_chunk)
+        toks = jnp.zeros((scfg.slots, plen), jnp.int32)
+        for i, r in enumerate(requests):
+            p = jnp.asarray(r.prompt[-plen:], jnp.int32)
+            toks = toks.at[i, plen - len(p):].set(p)
+
+        cache = init_cache(self.cfg, scfg.slots, scfg.max_len)
+        logits, cache = self._prefill(self.params, cache, toks)
+        outs: list[list[int]] = [[] for _ in range(scfg.slots)]
+        done = [False] * scfg.slots
+        max_new = max(r.max_new_tokens for r in requests)
+        cur = jnp.argmax(logits, -1)                    # [slots]
+        for step in range(max_new):
+            for i, r in enumerate(requests):
+                t = int(cur[i])
+                if not done[i]:
+                    outs[i].append(t)
+                    if t == r.eos_id or len(outs[i]) >= r.max_new_tokens:
+                        done[i] = True
+            if all(done[: n]):
+                break
+            logits, cache = self._decode(self.params, cache, cur[:, None])
+            cur = jnp.argmax(logits, -1)
+        return outs[:n]

@@ -1,0 +1,97 @@
+"""The QFT step functions — the units lowered by launch/dryrun and driven by
+train/qft_trainer.
+
+train_step  = teacher forward (FP, stop-grad) + student forward (fake-quant,
+              offline subgraph inside) + backbone-L2 distillation + Adam.
+prefill/decode = the deployed inference graph (serve/).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..core.distill import qft_loss
+from ..core.qconfig import QuantConfig
+from ..models import forward
+from ..models.config import ModelConfig
+from ..optim.adam import Adam
+
+
+def make_train_step(cfg: ModelConfig, qcfg: QuantConfig | None, opt: Adam,
+                    ce_proportion: float = 0.0,
+                    grad_compress=None, grad_mask=None,
+                    microbatches: int = 1):
+    """Returns train_step(student, opt_state, teacher, batch) -> (s, o, metrics).
+
+    ``grad_compress``: optional (compress → decompress residual) hook from
+    train/compression.py (int8 gradient all-reduce with error feedback).
+    ``grad_mask``: optional fn(path, g) -> g — zero out DoF subsets for the
+    paper's frozen-scales ablations (Figs. 8, 9).
+    ``microbatches``: gradient accumulation — splits the batch on axis 0 and
+    lax.scans the fwd/bwd, dividing live activation memory by the count
+    (§Perf: the memory-term lever for 100B+ QFT).
+    """
+
+    def loss_fn(student, teacher, batch):
+        s_out = forward(student, cfg, qcfg, batch)
+        t_out = forward(teacher, cfg, None, batch)
+        loss = qft_loss(s_out["hidden"], t_out["hidden"],
+                        s_out["logits"] if ce_proportion > 0 else None,
+                        t_out["logits"] if ce_proportion > 0 else None,
+                        ce_proportion=ce_proportion)
+        return loss
+
+    def grads_of(student, teacher, batch):
+        if microbatches <= 1:
+            return jax.value_and_grad(loss_fn)(student, teacher, batch)
+        mb = {k: v.reshape((microbatches, v.shape[0] // microbatches)
+                           + v.shape[1:]) for k, v in batch.items()}
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), student)
+
+        def body(acc, b):
+            l, g = jax.value_and_grad(loss_fn)(student, teacher, b)
+            acc = jax.tree.map(lambda a, x: a + x.astype(jnp.float32)
+                               / microbatches, acc, g)
+            return acc, l / microbatches
+
+        grads, losses = jax.lax.scan(body, zero, mb)
+        return jnp.sum(losses), grads
+
+    def train_step(student, opt_state, teacher, batch):
+        loss, grads = grads_of(student, teacher, batch)
+        if grad_mask is not None:
+            grads = jax.tree_util.tree_map_with_path(grad_mask, grads)
+        if grad_compress is not None:
+            grads, opt_state = grad_compress(grads, opt_state)
+        student, opt_state = opt.update(grads, opt_state, student)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        return student, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, qcfg: QuantConfig | None):
+    """prefill_step(params, cache, batch) -> (next_token_logits, cache)."""
+
+    def prefill_step(params, cache, batch):
+        out = forward(params, cfg, qcfg, batch, cache=cache)
+        return out["logits"][:, -1], out["cache"]
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, qcfg: QuantConfig | None):
+    """decode_step(params, cache, batch{tokens:[B,1]}) -> (logits, cache).
+
+    Greedy next-token; the cache is donated by callers (serve engine, dryrun).
+    """
+
+    def decode_step(params, cache, batch):
+        out = forward(params, cfg, qcfg, batch, cache=cache)
+        return out["logits"][:, -1], out["cache"]
+
+    return decode_step

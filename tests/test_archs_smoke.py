@@ -1,0 +1,68 @@
+"""Per-architecture smoke tests: reduced config, one forward + one QFT train
+step on CPU, asserting output shapes and no NaNs (assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core import deployment_oriented, backbone_l2
+from repro.models import init_model, forward, init_cache
+
+QCFG = deployment_oriented()
+
+
+def _batch(cfg, key, B=2, S=16):
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab)}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(key, (B, 4, cfg.d_model),
+                                                  jnp.bfloat16)
+        batch["positions"] = jnp.broadcast_to(
+            jnp.arange(S + 4)[None, None], (B, 3, S + 4)).astype(jnp.int32)
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(key, (B, 8, cfg.d_model),
+                                            jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    key = jax.random.PRNGKey(0)
+    student = init_model(key, cfg, QCFG)
+    teacher = init_model(key, cfg, None)
+    batch = _batch(cfg, key)
+
+    out = forward(student, cfg, QCFG, batch)
+    S_total = batch["tokens"].shape[1] + (
+        batch["patch_embeds"].shape[1] if "patch_embeds" in batch else 0)
+    assert out["hidden"].shape == (2, S_total, cfg.d_model)
+    assert out["logits"].shape[-1] == cfg.vocab_padded
+    assert not bool(jnp.any(jnp.isnan(out["hidden"]))), "NaN in hidden"
+    assert not bool(jnp.any(jnp.isnan(out["logits"]))), "NaN in logits"
+
+    def loss_fn(sp):
+        hs = forward(sp, cfg, QCFG, batch)["hidden"]
+        ht = forward(teacher, cfg, None, batch)["hidden"]
+        return backbone_l2(hs, ht)
+
+    loss, grads = jax.jit(jax.value_and_grad(loss_fn))(student)
+    assert not bool(jnp.isnan(loss)), "NaN loss"
+    sq = sum(float(jnp.sum(g.astype(jnp.float32) ** 2))
+             for g in jax.tree.leaves(grads))
+    assert sq > 0 and not jnp.isnan(sq), "dead/NaN gradients"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_decode(arch):
+    cfg = get_config(arch, smoke=True)
+    key = jax.random.PRNGKey(1)
+    params = init_model(key, cfg, QCFG)
+    batch = _batch(cfg, key)
+    cache = init_cache(cfg, 2, 32)
+    pre = forward(params, cfg, QCFG, batch, cache=cache)
+    step = {"tokens": jnp.ones((2, 1), jnp.int32)}
+    if cfg.family == "vlm":
+        step["positions"] = jnp.full((2, 3, 1), 20, jnp.int32)
+    dec = forward(params, cfg, QCFG, step, cache=pre["cache"])
+    assert dec["logits"].shape == (2, 1, cfg.vocab_padded)
+    assert not bool(jnp.any(jnp.isnan(dec["logits"])))

@@ -1,0 +1,120 @@
+"""Offline-subgraph (core.dof) behaviour: Eq. 2 relations, export fidelity,
+gradient flow to every DoF, CLE reframing equivalence (Appendix D)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (QuantConfig, Granularity, apq_init_qlinear,
+                        cle_factors, dof, effective_weight, export_qlinear,
+                        dequantize_export, init_qlinear, init_stream,
+                        mmse_init_qlinear, permissive, qlinear)
+from repro.core import dof as dof_mod
+from repro.core.fakequant import fake_quant
+
+
+def test_outer_product_scale_structure():
+    """S_w must be exactly S_wL ⊗ S_wR (Eq. 2/9)."""
+    cfg = permissive()
+    p = init_qlinear(jax.random.PRNGKey(0), 8, 6, cfg)
+    log_sa = jax.random.normal(jax.random.PRNGKey(1), (8,)) * 0.3
+    s = dof_mod.weight_scale(p, log_sa)
+    s_wl = jnp.exp(-log_sa)
+    s_wr = jnp.exp(p["log_swr"])
+    np.testing.assert_allclose(np.asarray(s),
+                               np.asarray(s_wl[:, None] * s_wr[None, :]),
+                               rtol=1e-6)
+
+
+def test_export_matches_effective_weight():
+    cfg = permissive()
+    key = jax.random.PRNGKey(0)
+    for expert_dim in (None, 3):
+        p = init_qlinear(key, 16, 8, cfg, expert_dim=expert_dim)
+        p = mmse_init_qlinear(p, cfg)
+        log_sa = jax.random.normal(key, (16,)) * 0.2
+        ex = export_qlinear(p, cfg, log_sa_in=log_sa)
+        w_eff = effective_weight(p, cfg, log_sa, compute_dtype=jnp.float32)
+        deq = dequantize_export(ex, jnp.float32)
+        np.testing.assert_allclose(np.asarray(deq), np.asarray(w_eff),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_gradients_reach_all_dof():
+    """Weights, biases, S_wR and the stream's (S_a, zp) all get gradients."""
+    cfg = QuantConfig(w_bits=4, a_bits=8, granularity=Granularity.CHW)
+    key = jax.random.PRNGKey(0)
+    p = init_qlinear(key, 16, 8, cfg, bias=True)
+    stream = init_stream(16)
+    x = jax.random.normal(key, (4, 16))
+
+    def loss(p, stream):
+        return jnp.sum(qlinear(x, p, cfg, stream=stream) ** 2)
+
+    gp, gs = jax.grad(loss, argnums=(0, 1))(p, stream)
+    for name, g in [("w", gp["w"]), ("b", gp["b"]), ("log_swr", gp["log_swr"]),
+                    ("log_sa", gs["log_sa"]), ("zp", gs["zp"])]:
+        assert bool(jnp.any(g != 0)), f"no gradient reached {name}"
+
+
+def test_cle_scales_equal_weight_preconditioning():
+    """Appendix D Eq. 18: folding CLE factors into the stream scale reproduces
+    the SAME deployed math as the classical weight transform (Eq. 16).
+
+    Classical CLE: consumer rows W/C, producer output ×C; the consumer's
+    effective compute is  x @ (C ⊙ fq(W/C, s)).  DoF view: keep W, set the
+    stream scale so S_wL[m] = C[m] (grid C·s per row) — identical result:
+    C·s·round(W/(C·s)).  (In our parameterization S_wL = exp(-log_sa), so
+    log_sa = -log C.)"""
+    cfg = permissive()
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (8, 6)) * 0.2
+    c = jnp.exp(jax.random.normal(jax.random.PRNGKey(1), (8,)) * 0.5)
+
+    # classical: rows preconditioned by 1/C, activations carry the C factor
+    p1 = {"w": w / c[:, None],
+          "log_swr": jnp.zeros((6,)) + jnp.log(0.02)}
+    w_eff_classic = effective_weight(p1, cfg, None, jnp.float32) * c[:, None]
+
+    # reframed: keep W, absorb C into the stream scale DoF (S_wL = C)
+    p2 = {"w": w, "log_swr": jnp.zeros((6,)) + jnp.log(0.02)}
+    log_sa = -jnp.log(c)         # S_wL = exp(-log_sa) = C
+    w_eff_dof = effective_weight(p2, cfg, log_sa, jnp.float32)
+    np.testing.assert_allclose(np.asarray(w_eff_classic),
+                               np.asarray(w_eff_dof), rtol=1e-5, atol=1e-6)
+
+
+def test_apq_init_reduces_error_vs_chw():
+    cfg = permissive()
+    key = jax.random.PRNGKey(3)
+    p = init_qlinear(key, 32, 16, cfg)
+    p["w"] = p["w"] * jnp.exp(jax.random.normal(key, (32, 1)))
+    p_ch = mmse_init_qlinear(p, cfg)
+    w_eff_ch = effective_weight(p_ch, cfg, None, jnp.float32)
+    p_dch, log_swl = apq_init_qlinear(p, cfg)
+    w_eff_dch = effective_weight(p_dch, cfg, -log_swl, jnp.float32)
+    e_ch = float(jnp.linalg.norm(p["w"] - w_eff_ch))
+    e_dch = float(jnp.linalg.norm(p["w"] - w_eff_dch))
+    assert e_dch <= e_ch * 1.001, (e_ch, e_dch)
+
+
+def test_exempt_bits_override():
+    """8-bit exempt layers quantize on the finer grid (policy §4)."""
+    cfg = permissive()
+    key = jax.random.PRNGKey(0)
+    p = mmse_init_qlinear(init_qlinear(key, 32, 8, cfg), cfg, bits=8)
+    w4 = effective_weight(p, cfg, None, jnp.float32, bits=4)
+    w8 = effective_weight(p, cfg, None, jnp.float32, bits=8)
+    e4 = float(jnp.linalg.norm(p["w"] - w4))
+    e8 = float(jnp.linalg.norm(p["w"] - w8))
+    assert e8 < e4
+
+
+def test_exempt_policy_one_percent():
+    from repro.core import select_exempt_layers
+    cfg = permissive()
+    sizes = {f"big{i}": 1000 for i in range(10)} | {"tiny1": 20, "tiny2": 30}
+    ex = select_exempt_layers(sizes, cfg)
+    assert ex == {"tiny1", "tiny2"} or ex == {"tiny1"}   # ≤1% of 10050
+    total = sum(sizes.values())
+    assert sum(sizes[n] for n in ex) <= 0.01 * total

@@ -1,0 +1,104 @@
+"""Property-based tests (hypothesis) on the QFT core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (apq_scales, fake_quant, mmse_ch, mmse_dch, mmse_error,
+                        mmse_lw, pack_int4, ppq_scale, qrange, quantize,
+                        unpack_int4)
+
+_f = st.floats(min_value=-4.0, max_value=4.0, allow_nan=False,
+               allow_infinity=False)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(_f, min_size=4, max_size=64),
+       st.sampled_from([2, 4, 8]),
+       st.floats(min_value=0.01, max_value=1.0))
+def test_quant_error_bound_in_range(vals, bits, scale):
+    """|x - deq(q(x))| ≤ scale/2 for every unclipped element."""
+    x = jnp.asarray(vals, jnp.float32)
+    s = jnp.float32(scale)
+    y = fake_quant(x, s, bits, signed=True)
+    lo, hi = qrange(bits, True)
+    unclipped = jnp.abs(x / s) <= hi
+    err = jnp.abs(x - y)
+    assert bool(jnp.all(jnp.where(unclipped, err <= s / 2 + 1e-6, True)))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(_f, min_size=4, max_size=64),
+       st.sampled_from([4, 8]),
+       st.floats(min_value=0.01, max_value=1.0))
+def test_fake_quant_idempotent(vals, bits, scale):
+    """fake_quant(fake_quant(x)) == fake_quant(x) (on-grid fixed point)."""
+    x = jnp.asarray(vals, jnp.float32)
+    s = jnp.float32(scale)
+    y1 = fake_quant(x, s, bits, signed=True)
+    y2 = fake_quant(y1, s, bits, signed=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_mmse_granularity_ordering(seed):
+    """Paper Fig. 3: err_lw ≥ err_ch ≥ err_dch (more DoF never hurt locally)."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    # heterogeneous rows/cols so granularity matters
+    w = (jax.random.normal(k1, (24, 16))
+         * jnp.exp(jax.random.normal(k2, (24, 1)))
+         * jnp.exp(jax.random.normal(k3, (1, 16)) * 0.5))
+    e_lw, e_ch, e_dch = (float(f(w, 4)) for f in (mmse_lw, mmse_ch, mmse_dch))
+    assert e_lw >= e_ch - 1e-4 * e_lw
+    assert e_ch >= e_dch - 1e-3 * e_ch
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000), st.sampled_from([4, 8]))
+def test_ppq_beats_naive_max(seed, bits):
+    """MMSE(PPQ) scale never loses to the naive max(|.|) range (Alg. 1)."""
+    w = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * 0.3
+    s_naive = jnp.max(jnp.abs(w)) / (2 ** (bits - 1) - 1)
+    s_ppq = ppq_scale(w, bits)
+    assert float(mmse_error(w, s_ppq, bits)) <= \
+        float(mmse_error(w, s_naive, bits)) + 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_pack_unpack_roundtrip(seed):
+    q = jax.random.randint(jax.random.PRNGKey(seed), (16, 8), -7, 8)
+    q = q.astype(jnp.int8)
+    np.testing.assert_array_equal(np.asarray(unpack_int4(pack_int4(q, 0), 0)),
+                                  np.asarray(q))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=1_000))
+def test_apq_improves_over_max_init(seed):
+    """APQ (Alg. 2) beats its own naive-max initialization.
+
+    (The paper claims 'robust convergence', not per-iteration monotonicity —
+    projections can transiently overshoot; we assert the converged error.)
+    """
+    w = (jax.random.normal(jax.random.PRNGKey(seed), (16, 12))
+         * jnp.exp(jax.random.normal(jax.random.PRNGKey(seed + 1), (16, 1))))
+    t0 = jnp.max(jnp.abs(w), axis=0, keepdims=True) / 7.0
+    s0 = jnp.max(jnp.abs(w / t0), axis=1, keepdims=True) / 7.0
+    e_init = float(mmse_error(w, s0 * t0, 4))
+    s, t = apq_scales(w, 4, iters=10)
+    e_apq = float(mmse_error(w, s * t, 4))
+    assert e_apq <= e_init * 1.001, (e_init, e_apq)
+
+
+def test_scale_gradient_equals_lsq():
+    """The offline subgraph's native scale gradient ≡ LSQ formula (paper §3.4)."""
+    x = jnp.array([0.3, -1.2, 9.0, -0.007])
+    s = jnp.array(0.5)
+    g = jax.grad(lambda s_: jnp.sum(fake_quant(x, s_, 4, signed=True)))(s)
+    q = jnp.clip(jnp.round(x / s), -7, 7)
+    lsq = jnp.sum(jnp.where(jnp.abs(x / s) <= 7, q - x / s, q))
+    np.testing.assert_allclose(float(g), float(lsq), rtol=1e-5)

@@ -1,0 +1,89 @@
+"""Per-kernel validation: shape/dtype sweeps vs pure-jnp oracles
+(interpret mode executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fakequant import pack_int4
+from repro.kernels import (fake_quant_kernel, flash_attention, quant_matmul)
+from repro.kernels import ref
+
+
+@pytest.mark.parametrize("M,K,N,bm,bn,bk", [
+    (64, 128, 64, 64, 64, 64),
+    (128, 256, 128, 64, 128, 128),
+    (32, 64, 256, 32, 64, 64),
+    (128, 512, 64, 128, 64, 256),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quant_matmul_sweep(M, K, N, bm, bn, bk, dtype):
+    key = jax.random.PRNGKey(M + K + N)
+    x = jax.random.normal(key, (M, K), dtype)
+    q4 = jax.random.randint(key, (K, N), -7, 8).astype(jnp.int8)
+    qw = pack_int4(q4, axis=0)
+    swl = (jnp.exp(jax.random.normal(key, (K,)) * 0.2) * 0.05).astype(jnp.float32)
+    swr = jnp.exp(jax.random.normal(key, (N,)) * 0.2).astype(jnp.float32)
+    y = quant_matmul(x, qw, swl, swr, bm=bm, bn=bn, bk=bk, interpret=True)
+    yr = ref.quant_matmul_ref(x, qw, swl, swr)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("R,C,bits", [(64, 128, 4), (128, 128, 8), (32, 256, 4)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fake_quant_sweep(R, C, bits, dtype):
+    key = jax.random.PRNGKey(R * C)
+    x = (jax.random.normal(key, (R, C)) * 0.1).astype(dtype)
+    s = jnp.full((1, C), 0.01, jnp.float32).astype(dtype)
+    y = fake_quant_kernel(x, jnp.broadcast_to(s, x.shape), bits, 32, 64, True)
+    yr = ref.fake_quant_ref(x, s, bits)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), rtol=1e-5, atol=1e-6)
+
+
+def test_fake_quant_ste_gradient():
+    x = jnp.array([[0.03, -0.02, 0.5, -0.5]])       # last two clip at 4b,s=.01
+    s = jnp.full_like(x, 0.01)
+    g = jax.grad(lambda a: jnp.sum(fake_quant_kernel(a, s, 4, 1, 4, True)))(x)
+    np.testing.assert_array_equal(np.asarray(g), [[1.0, 1.0, 0.0, 0.0]])
+
+
+@pytest.mark.parametrize("S,hd,bq,bk", [(128, 64, 64, 64), (256, 32, 64, 128),
+                                        (64, 128, 32, 32)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(S, hd, bq, bk, causal):
+    key = jax.random.PRNGKey(S + hd)
+    q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (2, S, hd))
+               for i in range(3))
+    o = flash_attention(q, k, v, causal=causal, bq=bq, bk=bk, interpret=True)
+    orf = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(orf),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    key = jax.random.PRNGKey(7)
+    q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (2, 128, 64),
+                                 jnp.bfloat16) for i in range(3))
+    o = flash_attention(q, k, v, causal=True, bq=64, bk=64, interpret=True)
+    orf = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(orf, np.float32), rtol=3e-2, atol=3e-2)
+
+
+def test_qlinear_deployed_matches_effective_weight():
+    """Deployment kernel path ≡ training-time effective weight (end to end)."""
+    from repro.core import dof, permissive
+    from repro.kernels.ops import qlinear_deployed
+    cfg = permissive()
+    key = jax.random.PRNGKey(0)
+    p = dof.init_qlinear(key, 64, 32, cfg)
+    p = dof.mmse_init_qlinear(p, cfg)
+    x = jax.random.normal(key, (8, 64), jnp.float32)
+    ex = dof.export_qlinear(p, cfg)
+    y_kernel = qlinear_deployed(x, ex, use_pallas=True, interpret=True)
+    w_eff = dof.effective_weight(p, cfg, compute_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(x @ w_eff),
+                               rtol=2e-4, atol=2e-4)
