@@ -1,92 +1,57 @@
-"""End-to-end driver: QFT-quantize a ~100M-parameter LM.
+"""End-to-end driver: QFT-quantize an LM at demo or assignment scale.
 
     PYTHONPATH=src python examples/quantize_llm.py --preset demo
     PYTHONPATH=src python examples/quantize_llm.py --preset full --steps 300
 
-``full`` builds a ~100M-param GQA transformer and runs a few hundred QFT
-steps (the assignment's end-to-end scale; sized for a real accelerator).
-``demo`` shrinks to ~8M params so the whole pipeline — teacher, calibration,
-MMSE/CLE init, joint all-DoF finetuning, checkpointing, deployment export —
-finishes in minutes on CPU.  Same code path as the multi-pod launcher.
+Thin wrapper over repro.pipeline: ``demo`` runs the registry smoke config
+(minutes on CPU); ``full`` runs the full published config (sized for a real
+accelerator).  Same code path as ``python -m repro quantize`` and the
+multi-pod launcher.
 """
 import argparse
-import dataclasses
 import time
 
-import jax
-import jax.numpy as jnp
-
-from repro.core import backbone_l2, deployment_oriented
-from repro.data.calib import CalibConfig, CalibDataset
-from repro.models import ModelConfig, forward, init_model
-from repro.serve.deploy import export_for_layers
-from repro.train.checkpoint import CheckpointManager
-from repro.train.qft_trainer import QFTConfig, QFTTrainer
+from repro.pipeline import PipelineConfig, run_pipeline
 
 PRESETS = {
-    # ~8M params — CPU demo
-    "demo": dict(n_layers=4, d_model=256, n_heads=8, n_kv_heads=4, d_ff=704,
-                 vocab=4096, head_dim=32, seq=64, batch=8, steps=60),
-    # ~100M params — assignment scale (run on accelerator)
-    "full": dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
-                 d_ff=2048, vocab=32000, head_dim=64, seq=512, batch=16,
-                 steps=300),
+    "demo": dict(smoke=True, steps=60, calib_samples=512, calib_seq_len=64,
+                 calib_batch_size=8),
+    # paper working point: ~8K sequences, a few hundred steps
+    "full": dict(smoke=False, steps=300, calib_samples=8192, calib_seq_len=512,
+                 calib_batch_size=16),
 }
 
 
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
     ap.add_argument("--preset", choices=PRESETS, default="demo")
     ap.add_argument("--steps", type=int, default=None)
     ap.add_argument("--cle", action="store_true", help="CLE+QFT two-step")
     ap.add_argument("--ckpt-dir", default="/tmp/qft_llm_ckpt")
     args = ap.parse_args()
-    p = PRESETS[args.preset]
-    steps = args.steps or p["steps"]
 
-    cfg = ModelConfig(name=f"llm-{args.preset}", family="dense",
-                      n_layers=p["n_layers"], d_model=p["d_model"],
-                      n_heads=p["n_heads"], n_kv_heads=p["n_kv_heads"],
-                      d_ff=p["d_ff"], vocab=p["vocab"],
-                      head_dim=p["head_dim"], qk_norm=True,
-                      scan_layers=False, remat=False)
-    print(f"model: {cfg.n_params()/1e6:.1f}M params")
-
-    teacher = init_model(jax.random.PRNGKey(0), cfg, None)
-    qcfg = deployment_oriented()
-    data = CalibDataset(CalibConfig(
-        n_samples=8192, seq_len=p["seq"], batch_size=p["batch"],
-        vocab=cfg.vocab))                      # paper's 8K working point
-    trainer = QFTTrainer(cfg, qcfg, teacher,
-                         QFTConfig(cle_init=args.cle),
-                         steps_per_epoch=data.steps_per_epoch)
-    calib = [{k: jnp.asarray(v) for k, v in next(iter(data)).items()}
-             for _ in range(4)]
+    p = dict(PRESETS[args.preset])
+    if args.steps is not None:
+        p["steps"] = args.steps
+    pcfg = PipelineConfig(arch=args.arch, mode="w4a8", cle=args.cle,
+                          workdir=args.ckpt_dir, serve_smoke=True,
+                          log_every=max(p["steps"] // 6, 1), **p)
+    print(f"model: {pcfg.arch} ({'smoke' if pcfg.smoke else 'full'}), "
+          f"{pcfg.steps} QFT steps")
 
     t0 = time.time()
-    student = trainer.prepare_student(jax.random.PRNGKey(1), calib)
-    print(f"prepared (MMSE init + calibration"
-          f"{' + CLE' if args.cle else ''}) in {time.time()-t0:.1f}s")
-
-    def deg(sp):
-        b = calib[0]
-        return float(backbone_l2(forward(sp, cfg, qcfg, b)["hidden"],
-                                 forward(teacher, cfg, None, b)["hidden"]))
-
-    d0 = deg(student)
-    ckpt = CheckpointManager(args.ckpt_dir, keep=2)
-    student, hist = trainer.run(student, data, steps=steps,
-                                log_every=max(steps // 6, 1), ckpt=ckpt)
-    d1 = deg(student)
-    print(f"distill loss: {d0:.4f} -> {d1:.4f}  (x{d0/max(d1,1e-9):.2f} "
-          f"reduction in {time.time()-t0:.0f}s, ckpt at step "
-          f"{ckpt.latest_step()})")
-
-    exported = jax.jit(lambda s: export_for_layers(s, qcfg))(student)
-    n_bytes = sum(l.size * l.dtype.itemsize
-                  for l in jax.tree.leaves(exported))
-    print(f"deployment artifact: {n_bytes/1e6:.1f} MB "
-          f"({n_bytes/cfg.n_params():.2f} bytes/param vs 4.0 fp32)")
+    result = run_pipeline(pcfg, log=lambda s: print(f"  {s}"))
+    ft = result.metrics.get("finetune")
+    if ft:
+        print(f"distill loss: {ft['first_loss']:.4f} -> {ft['final_loss']:.4f}"
+              f"  (x{ft['first_loss']/max(ft['final_loss'],1e-9):.2f} "
+              f"reduction in {time.time()-t0:.0f}s)")
+    ev = result.metrics["evaluate"]
+    n_params = result.model_cfg.n_params()
+    print(f"deployment artifact: {ev['artifact_bytes']/1e6:.1f} MB "
+          f"({ev['artifact_bytes']/n_params:.2f} bytes/param vs 4.0 fp32); "
+          f"serve smoke: {ev.get('serve')}")
 
 
 if __name__ == "__main__":

@@ -1,60 +1,35 @@
-"""Quickstart: QFT-quantize a model to W4A8 in one call chain.
+"""Quickstart: QFT-quantize a model to W4A8 in one call.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Mirrors the paper's single-step pipeline: teacher in → MMSE init + range
-calibration → joint all-DoF finetuning → deployment export (int4-packed).
-Runs in ~2 minutes on CPU with a tiny LM.
-"""
-import jax
-import jax.numpy as jnp
+Thin wrapper over repro.pipeline — the paper's single-step flow (calibrate →
+MMSE init → joint all-DoF finetuning → int4-packed export) is one
+``run_pipeline`` call; the CLI equivalent is
 
-from repro.core import deployment_oriented, backbone_l2
-from repro.data.calib import CalibConfig, CalibDataset
-from repro.models import ModelConfig, forward, init_model
-from repro.serve.deploy import export_for_layers
-from repro.train.qft_trainer import QFTConfig, QFTTrainer
+    python -m repro quantize --config qwen3_8b --steps 96
+
+Runs in ~2 minutes on CPU with the registry's smoke-size model.
+"""
+from repro.pipeline import PipelineConfig, run_pipeline
 
 
 def main():
-    # 1. the pretrained FP network (stand-in: random-init tiny LM)
-    cfg = ModelConfig(name="quickstart", family="dense", n_layers=2,
-                      d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
-                      vocab=512, head_dim=16, qk_norm=True,
-                      scan_layers=False, remat=False)
-    teacher = init_model(jax.random.PRNGKey(0), cfg, None)
+    pcfg = PipelineConfig(
+        arch="qwen3-8b",          # registry entry; smoke=True → tiny variant
+        mode="w4a8",              # the paper's deployment-oriented setting
+        steps=96,
+        calib_samples=512, calib_seq_len=32, calib_batch_size=16,
+        log_every=32,
+    )
+    result = run_pipeline(pcfg, log=lambda s: print(f"  {s}"))
 
-    # 2. W4A8, layerwise rescale — the paper's 'deployment-oriented' setting
-    qcfg = deployment_oriented()
-
-    # 3. small unlabeled calibration set (paper: ~8K samples, 0.7% of train)
-    data = CalibDataset(CalibConfig(n_samples=512, seq_len=32, batch_size=16,
-                                    vocab=cfg.vocab))
-    trainer = QFTTrainer(cfg, qcfg, teacher, QFTConfig(), steps_per_epoch=32)
-    calib = [{k: jnp.asarray(v) for k, v in next(iter(data)).items()}
-             for _ in range(4)]
-
-    # 4. the sole pre-QFT step: MMSE scales + naive range calibration
-    student = trainer.prepare_student(jax.random.PRNGKey(1), calib)
-
-    def deg(p):
-        b = calib[0]
-        return float(backbone_l2(forward(p, cfg, qcfg, b)["hidden"],
-                                 forward(teacher, cfg, None, b)["hidden"]))
-
-    print(f"distillation loss before QFT: {deg(student):.4f}")
-
-    # 5. joint end-to-end finetuning of ALL DoF (weights, biases, scales, F̂)
-    student, history = trainer.run(student, data, steps=96, log_every=32)
-    print(f"distillation loss after QFT:  {deg(student):.4f}")
-    for h in history:
+    for h in result.history:
         print(f"  step {h['step']:>4}  loss {h['loss']:.4f}")
-
-    # 6. export the deployment artifact: int4-packed weights + scales
-    exported = jax.jit(lambda p: export_for_layers(p, qcfg))(student)
-    q = exported["layers"]["mlp"]["up"]["q"]   # [L, d/2, ff] packed pairs
-    print(f"deployed mlp.up: {q.dtype} {q.shape} (int4 pairs, "
-          f"{q.size / (cfg.n_layers * 64 * 128):.2f} bytes/param)")
+    ev = result.metrics["evaluate"]
+    print(f"distillation loss after QFT: {ev['distill_loss']:.4f} "
+          f"(top-1 agreement {ev['top1_agree']:.2f})")
+    print(f"deployment artifact: {ev['artifact_bytes']/1e6:.2f} MB, "
+          f"export parity max err {ev['export_parity_max_err']:.2g}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,3 @@
+"""QFT reproduction: post-training quantization via joint finetuning of all DoF."""
+
+__version__ = "0.1.0"

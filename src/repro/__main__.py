@@ -1,0 +1,7 @@
+"""``python -m repro`` — the quantization pipeline CLI (pipeline/cli.py)."""
+import sys
+
+from .pipeline.cli import main
+
+if __name__ == "__main__":
+    sys.exit(main())

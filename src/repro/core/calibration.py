@@ -12,7 +12,7 @@ from typing import Callable, Iterable
 import jax
 import jax.numpy as jnp
 
-from .qconfig import QuantConfig, Granularity
+from .qconfig import QuantConfig
 
 
 def ranges_from_batch(taps: dict[str, jax.Array]) -> dict[str, tuple[jax.Array, jax.Array]]:

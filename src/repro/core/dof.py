@@ -29,7 +29,7 @@ import jax.numpy as jnp
 
 from .fakequant import fake_quant, fake_quant_act, pack_int4, quantize
 from .mmse import apq_scales, ppq_scale
-from .qconfig import Granularity, QuantConfig
+from .qconfig import QuantConfig
 
 Params = dict[str, Any]
 

@@ -15,21 +15,41 @@ from .flash_attention import flash_attention
 from .quant_matmul import quant_matmul
 
 
+def pallas_tiles_ok(M: int, N: int, K: int, bm: int = 128, bn: int = 128,
+                    bk: int = 256) -> bool:
+    """quant_matmul requires every dim to tile by its (clamped) block size."""
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    return M % bm == 0 and N % bn == 0 and K % bk == 0
+
+
 def qlinear_deployed(x: jax.Array, export: dict, use_pallas: bool = False,
-                     interpret: bool = True) -> jax.Array:
-    """y = x @ dequant(export) (+b).  x: [..., K]; export from dof.export_qlinear."""
+                     interpret: bool = True, plan=None) -> jax.Array:
+    """y = x @ dequant(export) (+b).  x: [..., K]; export from dof.export_qlinear.
+
+    ``plan`` (serve.deploy.DeployPlan, duck-typed to avoid an upward import)
+    overrides the kernel routing knobs — the serving engine and launchers pass
+    the same plan object the artifact was exported under.
+    """
+    if plan is not None:
+        use_pallas, interpret = plan.use_pallas, plan.interpret
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
+    q = export["q"]
     s_wl = export.get("s_wl")
     if s_wl is None:
         s_wl = jnp.ones((x.shape[-1],), jnp.float32)
     s_wr = export["s_wr"]
     if s_wr.ndim == 0:
-        s_wr = jnp.broadcast_to(s_wr, (export["q"].shape[-1],))
-    if use_pallas:
-        y = quant_matmul(x2, export["q"], s_wl, s_wr, interpret=interpret)
-    else:
-        y = ref.quant_matmul_ref(x2, export["q"], s_wl, s_wr)
+        s_wr = jnp.broadcast_to(s_wr, (q.shape[-1],))
+    if q.dtype == jnp.uint8:                  # int4 nibble-packed
+        if use_pallas and pallas_tiles_ok(x2.shape[0], q.shape[-1],
+                                          x2.shape[-1]):
+            y = quant_matmul(x2, q, s_wl, s_wr, interpret=interpret)
+        else:                                 # odd shapes: XLA reference path
+            y = ref.quant_matmul_ref(x2, q, s_wl, s_wr)
+    else:                                     # int8 / unpacked (exempt layers)
+        w = q.astype(jnp.float32) * s_wl[:, None] * s_wr[None, :]
+        y = (x2.astype(jnp.float32) @ w).astype(x.dtype)
     if "b" in export:
         y = y + export["b"].astype(y.dtype)
     return y.reshape(*lead, -1)

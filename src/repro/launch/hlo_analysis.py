@@ -11,7 +11,7 @@
 """
 from __future__ import annotations
 
-import json
+
 import re
 from typing import Any
 

@@ -1,24 +1,44 @@
 """Production mesh definition (assignment-mandated shapes).
 
 Functions, not module-level constants: importing this module never touches
-jax device state.
+jax device state.  ``_make_mesh``/``mesh_context`` paper over jax API drift:
+``AxisType`` and ``jax.set_mesh`` only exist on newer jax; older versions
+get the plain (auto-sharding) equivalents.
 """
 from __future__ import annotations
 
+import contextlib
+
 import jax
+
+
+def _make_mesh(shape, axes):
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:                      # older jax: Auto is the default
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
+def mesh_context(mesh):
+    """``with mesh_context(mesh):`` — jax.set_mesh where available, else a
+    no-op (pre-set_mesh jax resolves NamedShardings against the mesh they
+    were built with)."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is None:
+        return contextlib.nullcontext()
+    return set_mesh(mesh)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Single-device mesh for smoke tests / local runs."""
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((1, 1), ("data", "model"))
 
 
 def make_elastic_mesh(n_devices: int, model_parallel: int = 16):
@@ -26,5 +46,4 @@ def make_elastic_mesh(n_devices: int, model_parallel: int = 16):
     restarts, train/elastic.py). Drops stragglers that break divisibility."""
     model_parallel = min(model_parallel, n_devices)
     data = n_devices // model_parallel
-    return jax.make_mesh((data, model_parallel), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((data, model_parallel), ("data", "model"))

@@ -12,7 +12,6 @@ reduced config on the host mesh — the CI path on this CPU container.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -22,14 +21,14 @@ from ..configs import get_config
 from ..core import deployment_oriented, permissive
 from ..data.calib import CalibConfig, CalibDataset
 from ..models import init_model, set_runtime
-from ..optim.adam import paper_recipe
-from ..sharding.partition import (ShardingPolicy, batch_shardings,
-                                  opt_state_shardings, params_shardings)
+from ..pipeline import PipelineConfig, run_pipeline
+from ..sharding.partition import (ShardingPolicy, opt_state_shardings,
+                                  params_shardings)
 from ..train.checkpoint import CheckpointManager
 from ..train.elastic import ElasticConfig, ElasticRunner
 from ..train.qft_trainer import QFTConfig, QFTTrainer
 from ..train.steps import make_train_step
-from .mesh import make_host_mesh, make_production_mesh
+from .mesh import make_production_mesh, mesh_context
 
 
 def main() -> None:
@@ -43,18 +42,25 @@ def main() -> None:
     ap.add_argument("--multi-pod", action="store_true")
     args = ap.parse_args()
 
-    qcfg = deployment_oriented() if args.mode == "w4a8" else permissive()
-    cfg = get_config(args.arch, smoke=args.smoke)
     if args.smoke:
-        cfg = dataclasses.replace(cfg, scan_layers=False, remat=False)
-        mesh = make_host_mesh()
-        pol = ShardingPolicy(fsdp=None)
-    else:
-        cfg = get_config(args.arch).with_padding(tp=16)
-        mesh = make_production_mesh(multi_pod=args.multi_pod)
-        pol = ShardingPolicy(
-            dp=("pod", "data") if args.multi_pod else ("data",))
-        set_runtime(act_spec=pol.dp)
+        # CI / laptop path: the same staged pipeline as `python -m repro
+        # quantize`, per-stage checkpoints under --ckpt-dir
+        pcfg = PipelineConfig(
+            arch=args.arch, mode=args.mode, smoke=True, cle=args.cle,
+            steps=min(args.steps, 50), workdir=args.ckpt_dir,
+            calib_samples=512, calib_seq_len=64, calib_batch_size=8)
+        result = run_pipeline(pcfg, log=lambda s: print(f"  {s}"))
+        ft = result.metrics.get("finetune")
+        if ft:
+            print(f"smoke done: loss {ft['final_loss']:.4f}")
+        return
+
+    qcfg = deployment_oriented() if args.mode == "w4a8" else permissive()
+    cfg = get_config(args.arch).with_padding(tp=16)
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    pol = ShardingPolicy(
+        dp=("pod", "data") if args.multi_pod else ("data",))
+    set_runtime(act_spec=pol.dp)
 
     data = CalibDataset(CalibConfig(n_samples=8192, seq_len=512,
                                     batch_size=16, vocab=cfg.vocab))
@@ -66,15 +72,9 @@ def main() -> None:
     student = trainer.prepare_student(jax.random.PRNGKey(1), calib)
     ckpt = CheckpointManager(args.ckpt_dir, keep=3)
 
-    if args.smoke:
-        student, hist = trainer.run(student, data, steps=min(args.steps, 50),
-                                    ckpt=ckpt)
-        print(f"smoke done: loss {hist[-1]['loss']:.4f}")
-        return
-
     # ---- sharded elastic path ----
     opt = trainer.opt
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         s_sh = params_shardings(student, cfg, mesh, pol)
         t_sh = params_shardings(teacher, cfg, mesh, pol)
         o_sh = opt_state_shardings(s_sh, mesh)

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core import dof
-from ..core.fakequant import fake_quant
+from ..core.fakequant import fake_quant, pack_int4, quantize
 from ..core.mmse import apq_scales, ppq_scale
 from ..core.qconfig import QuantConfig
 
@@ -110,6 +110,101 @@ def apq_init_qconv(p: Params, cfg: QuantConfig) -> tuple[Params, jax.Array]:
     log_swl_full = jnp.log(s[:, 0]).reshape(kh, kw, cin)
     log_swl = jnp.mean(log_swl_full, axis=(0, 1))
     return ({**p, "log_f": jnp.log(t[0, :])}, log_swl)
+
+
+def conv_effective_weight(p: Params, cfg: QuantConfig,
+                          log_sa_in: jax.Array | None = None,
+                          log_sa_out: jax.Array | None = None,
+                          compute_dtype=jnp.float32,
+                          bits: int | None = None) -> jax.Array:
+    """The fake-quantized (deploy-equivalent) conv kernel — the export oracle."""
+    s = conv_weight_scale(p, log_sa_in, log_sa_out)
+    return fake_quant(p["w"], s, bits or cfg.w_bits).astype(compute_dtype)
+
+
+def export_qconv(p: Params, cfg: QuantConfig,
+                 log_sa_in: jax.Array | None = None,
+                 log_sa_out: jax.Array | None = None,
+                 pack: bool = True, bits: int | None = None) -> Params:
+    """Freeze a conv's offline subgraph into {q, s_wl?, s_wr, b}.
+
+    Same artifact schema as dof.export_qlinear (q: [kh, kw, cin(/2), cout]),
+    so dof.dequantize_export decodes it unchanged — one deploy format across
+    linears and convs.
+    """
+    bits = bits or cfg.w_bits
+    s = conv_weight_scale(p, log_sa_in, log_sa_out)
+    q = quantize(p["w"], s, bits, signed=True)
+    out: Params = {}
+    if bits == 4 and pack and p["w"].shape[-2] % 2 == 0:
+        out["q"] = pack_int4(q.astype(jnp.int8), axis=-2)
+    else:
+        out["q"] = q.astype(jnp.int8)
+    if log_sa_in is not None:
+        out["s_wl"] = jnp.exp(-log_sa_in).astype(jnp.float32)
+    log_f = p["log_f"]
+    log_f = log_f if log_f.ndim else log_f[None]
+    log_swr = log_f + (log_sa_out if log_sa_out is not None else 0.0)
+    out["s_wr"] = jnp.exp(jnp.broadcast_to(
+        log_swr, (p["w"].shape[-1],))).astype(jnp.float32)
+    out["b"] = p["b"].astype(jnp.float32)
+    return out
+
+
+def _conv_stream_scales(params: Params, i: int):
+    """(log_sa_in, log_sa_out) for conv i under the Eq. 2 stream chaining."""
+    n = len(params["convs"])
+    st_out = (params["streams"][i + 1] if i + 1 < n
+              else params.get("fc_stream"))
+    log_in = params["streams"][i].get("log_sa")
+    log_out = None if st_out is None else st_out.get("log_sa")
+    return log_in, log_out
+
+
+def export_cnn(params: Params, plan) -> Params:
+    """Whole-model CNN export under a serve.deploy.DeployPlan."""
+    qcfg = plan.qcfg
+    out: Params = {"convs": []}
+    for i, conv in enumerate(params["convs"]):
+        log_in, log_out = _conv_stream_scales(params, i)
+        out["convs"].append(export_qconv(conv, qcfg, log_in, log_out,
+                                         pack=plan.packed,
+                                         bits=plan.bits_for(f"conv{i}")))
+    out["fc"] = dof.export_qlinear(
+        params["fc"], qcfg,
+        log_sa_in=params["fc_stream"]["log_sa"],
+        pack=plan.packed, bits=plan.bits_for("fc"))
+    return out
+
+
+def cnn_deploy_view(exported: Params, plan, dtype=jnp.float32) -> Params:
+    """Exported CNN artifact → forward_cnn()-compatible tree (qcfg=None)."""
+    convs = [{"w": dof.dequantize_export(ex, dtype,
+                                         packed=plan.is_packed(f"conv{i}")),
+              "b": ex["b"]} for i, ex in enumerate(exported["convs"])]
+    fc_ex = exported["fc"]
+    return {"convs": convs,
+            "streams": [{} for _ in convs],
+            "fc": {"w": dof.dequantize_export(fc_ex, dtype,
+                                              packed=plan.is_packed("fc")),
+                   "b": fc_ex["b"]}}
+
+
+def cnn_effective_view(params: Params, plan, dtype=jnp.float32) -> Params:
+    """Fake-quant weights in cnn_deploy_view's structure (export parity oracle)."""
+    qcfg = plan.qcfg
+    convs = []
+    for i, conv in enumerate(params["convs"]):
+        log_in, log_out = _conv_stream_scales(params, i)
+        convs.append({"w": conv_effective_weight(
+            conv, qcfg, log_in, log_out, dtype,
+            bits=plan.bits_for(f"conv{i}")), "b": conv["b"]})
+    return {"convs": convs,
+            "streams": [{} for _ in convs],
+            "fc": {"w": dof.effective_weight(
+                params["fc"], qcfg, params["fc_stream"]["log_sa"],
+                compute_dtype=dtype, bits=plan.bits_for("fc")),
+                   "b": params["fc"]["b"]}}
 
 
 def init_cnn(key, ccfg: CNNConfig, qcfg: QuantConfig | None) -> Params:

@@ -1,0 +1,11 @@
+"""End-to-end quantization pipeline (the paper's single-step PTQ flow).
+
+    from repro.pipeline import PipelineConfig, run_pipeline
+    result = run_pipeline(PipelineConfig(arch="qwen3-8b", steps=60))
+
+CLI: ``python -m repro quantize --config qwen3_8b --w-bits 4``.
+"""
+from .config import MODES, STAGES, PipelineConfig, canonical_arch
+from .runner import PipelineResult, run_pipeline
+from .adapters import (CNNAdapter, TransformerAdapter, get_adapter,
+                       tree_parity_error)

@@ -1,0 +1,118 @@
+"""Command-line entry point:
+
+    python -m repro quantize --config qwen3_8b --w-bits 4 --steps 60
+    python -m repro quantize --config paper_cnn --steps 2
+    python -m repro list-configs
+
+``quantize`` resolves any model in configs/registry.py (module or registry
+spelling) and runs the full calibrate → MMSE/APQ init → QFT finetune →
+export → evaluate pipeline, printing per-stage progress and the final
+export-parity / degradation metrics.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from ..configs import registry
+from .config import MODES, STAGES, PipelineConfig
+from .runner import run_pipeline
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro",
+        description="QFT post-training quantization pipeline")
+    sub = ap.add_subparsers(dest="command", required=True)
+
+    q = sub.add_parser("quantize", help="run the end-to-end PTQ pipeline")
+    q.add_argument("--config", required=True,
+                   help="registry entry (qwen3-8b / qwen3_8b / paper_cnn ...)")
+    q.add_argument("--mode", choices=MODES, default="w4a8",
+                   help="paper setup: w4a8 (deployment) | w4chw (permissive)")
+    q.add_argument("--w-bits", type=int, default=None,
+                   help="override the mode's weight bits")
+    q.add_argument("--steps", type=int, default=60,
+                   help="QFT finetune steps (0 = heuristic PTQ only)")
+    q.add_argument("--full", action="store_true",
+                   help="full-size config (default: registry SMOKE)")
+    q.add_argument("--cle", action="store_true", help="CLE+QFT two-step")
+    q.add_argument("--base-lr", type=float, default=1e-4)
+    q.add_argument("--seed", type=int, default=0)
+    q.add_argument("--teacher-steps", type=int, default=0,
+                   help="paper-cnn: pre-train the FP teacher this many steps")
+    q.add_argument("--calib-samples", type=int, default=512)
+    q.add_argument("--calib-seq-len", type=int, default=32)
+    q.add_argument("--calib-batch-size", type=int, default=16)
+    q.add_argument("--workdir", default=None,
+                   help="per-stage checkpoint dir (enables --resume)")
+    q.add_argument("--no-resume", action="store_true")
+    q.add_argument("--stop-after", choices=STAGES, default=None)
+    q.add_argument("--serve-smoke", action="store_true",
+                   help="transformers: decode a demo batch from the artifact")
+    q.add_argument("--use-pallas", action="store_true",
+                   help="route deployed matmuls through kernels/quant_matmul")
+
+    sub.add_parser("list-configs", help="print every registry entry")
+    return ap
+
+
+def _pcfg_from_args(args: argparse.Namespace) -> PipelineConfig:
+    return PipelineConfig(
+        arch=args.config, mode=args.mode, w_bits=args.w_bits,
+        smoke=not args.full, steps=args.steps, seed=args.seed, cle=args.cle,
+        base_lr=args.base_lr, teacher_steps=args.teacher_steps,
+        calib_samples=args.calib_samples, calib_seq_len=args.calib_seq_len,
+        calib_batch_size=args.calib_batch_size, workdir=args.workdir,
+        resume=not args.no_resume, stop_after=args.stop_after,
+        serve_smoke=args.serve_smoke, use_pallas=args.use_pallas,
+        log_every=max(args.steps // 6, 1))
+
+
+def cmd_quantize(args: argparse.Namespace) -> int:
+    try:
+        pcfg = _pcfg_from_args(args)
+    except KeyError as e:
+        print(f"error: {e.args[0]}", file=sys.stderr)
+        return 2
+    print(f"pipeline: {pcfg.arch} mode={pcfg.mode} "
+          f"w{pcfg.quant_config().w_bits} steps={pcfg.steps} "
+          f"stages={' -> '.join(pcfg.stages())}")
+    result = run_pipeline(pcfg, log=lambda s: print(f"  {s}"))
+    if result.stages_skipped:
+        print(f"  skipped (resume): {', '.join(result.stages_skipped)}")
+    ft = result.metrics.get("finetune")
+    if ft:
+        print(f"  finetune loss: {ft['first_loss']:.4f} -> "
+              f"{ft['final_loss']:.4f} over {ft['steps']} steps")
+    ev = result.metrics.get("evaluate")
+    if ev:
+        for k, v in ev.items():
+            print(f"  {k}: {v:.6g}" if isinstance(v, float) else
+                  f"  {k}: {v}")
+        err = ev.get("export_parity_max_err")
+        if err is not None and err > 1e-3:
+            print(f"ERROR: export parity {err:.3g} exceeds fp tolerance",
+                  file=sys.stderr)
+            return 1
+    print("pipeline complete")
+    return 0
+
+
+def cmd_list_configs() -> int:
+    for arch, module in sorted(registry._MODULES.items()):
+        print(f"{arch:<22s} repro.configs.{module}")
+    return 0
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    if args.command == "quantize":
+        return cmd_quantize(args)
+    if args.command == "list-configs":
+        return cmd_list_configs()
+    return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -13,6 +13,7 @@ dry-run memory_analysis), vs 2 bytes bf16.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any
 
 import jax
@@ -47,16 +48,59 @@ def _is_qlinear(node) -> bool:
     return isinstance(node, dict) and "w" in node and "log_swr" in node
 
 
-def _export_node(name: str, node: Params, parent: Params,
-                 qcfg: QuantConfig) -> Params:
+@dataclasses.dataclass(frozen=True)
+class DeployPlan:
+    """Static deployment decisions, fixed at export time.
+
+    The one object every consumer of an exported artifact reads — the serving
+    engine (serve/engine.py), the deploy view, and the Pallas
+    kernels/quant_matmul path — instead of each re-deriving packing/bits from
+    (qcfg, EXEMPT_8B, dtype) on its own.
+    """
+    qcfg: QuantConfig
+    arch: str = ""
+    family: str = "dense"
+    packed: bool = True               # int4 nibble-packing for non-exempt linears
+    exempt: frozenset = frozenset(EXEMPT_8B)
+    use_pallas: bool = False          # route matmuls through kernels/quant_matmul
+    interpret: bool = True            # Pallas interpret mode (CPU)
+
+    def bits_for(self, name: str) -> int:
+        return self.qcfg.exempt_bits if name in self.exempt else self.qcfg.w_bits
+
+    def is_packed(self, name: str) -> bool:
+        return self.packed and self.bits_for(name) == 4
+
+
+def make_deploy_plan(qcfg: QuantConfig, arch: str = "", family: str = "dense",
+                     use_pallas: bool = False, interpret: bool = True
+                     ) -> DeployPlan:
+    return DeployPlan(qcfg=qcfg, arch=arch, family=family,
+                      packed=qcfg.w_bits == 4, use_pallas=use_pallas,
+                      interpret=interpret)
+
+
+def _as_plan(plan_or_qcfg) -> DeployPlan:
+    if isinstance(plan_or_qcfg, DeployPlan):
+        return plan_or_qcfg
+    return make_deploy_plan(plan_or_qcfg)
+
+
+def _stream_log_sa(name: str, parent: Params):
     sname = STREAM_OF.get(name)
     stream = parent.get(sname) if sname else None
-    log_sa = None if stream is None else stream["log_sa"]
-    bits = qcfg.exempt_bits if name in EXEMPT_8B else qcfg.w_bits
-    return dof.export_qlinear(node, qcfg, log_sa_in=log_sa, bits=bits)
+    return None if stream is None else stream["log_sa"]
 
 
-def _walk(tree, qcfg: QuantConfig, parent_key: str = ""):
+def _export_node(name: str, node: Params, parent: Params,
+                 plan: DeployPlan) -> Params:
+    return dof.export_qlinear(node, plan.qcfg,
+                              log_sa_in=_stream_log_sa(name, parent),
+                              pack=plan.packed, bits=plan.bits_for(name))
+
+
+def _walk(tree, plan: DeployPlan, parent_key: str = ""):
+    qcfg = plan.qcfg
     if isinstance(tree, dict):
         if "w" in tree and "log_s" in tree:          # quantized embedding
             s = jnp.exp(tree["log_s"])
@@ -67,40 +111,42 @@ def _walk(tree, qcfg: QuantConfig, parent_key: str = ""):
             if k in STREAM_KEYS:
                 continue                             # folded into weights
             if _is_qlinear(v):
-                out[k] = _export_node(k, v, tree, qcfg)
+                out[k] = _export_node(k, v, tree, plan)
             else:
-                out[k] = _walk(v, qcfg, k)
+                out[k] = _walk(v, plan, k)
         return out
     if isinstance(tree, (list, tuple)):
-        return type(tree)(_walk(v, qcfg) for v in tree)
+        return type(tree)(_walk(v, plan) for v in tree)
     return tree
 
 
-def export_model(params: Params, qcfg: QuantConfig) -> Params:
+def export_model(params: Params, plan_or_qcfg) -> Params:
     """Trained student params → deployment artifact (pure function; run under
     jit/eval_shape so 100B+ exports never materialize on the host)."""
-    return _walk(params, qcfg)
+    return _walk(params, _as_plan(plan_or_qcfg))
 
 
-def _deploy_node(name: str, ex: Params, qcfg: QuantConfig,
+def _deploy_node(name: str, ex: Params, plan: DeployPlan,
                  dtype=jnp.bfloat16) -> Params:
-    packed = name not in EXEMPT_8B and qcfg.w_bits == 4
-    out: Params = {"w": dof.dequantize_export(ex, dtype, packed=packed)}
+    out: Params = {"w": dof.dequantize_export(ex, dtype,
+                                              packed=plan.is_packed(name))}
     if "b" in ex:
         out["b"] = ex["b"]
     return out
 
 
-def deploy_view(exported: Params, qcfg: QuantConfig,
+def deploy_view(exported: Params, plan_or_qcfg,
                 dtype=jnp.bfloat16) -> Params:
     """Exported artifact → forward()-compatible tree (weights dequantized in
     the serving graph; use with qcfg=None in forward)."""
+    plan = _as_plan(plan_or_qcfg)
+
     def walk(tree, key=""):
         if isinstance(tree, dict):
             if "q" in tree and "s" in tree:          # embedding
                 return {"w": tree["q"].astype(jnp.float32) * tree["s"]}
             if "q" in tree and "s_wr" in tree:
-                return _deploy_node(key, tree, qcfg, dtype)
+                return _deploy_node(key, tree, plan, dtype)
             return {k: walk(v, k) for k, v in tree.items()}
         if isinstance(tree, (list, tuple)):
             return type(tree)(walk(v) for v in tree)
@@ -108,16 +154,144 @@ def deploy_view(exported: Params, qcfg: QuantConfig,
     return walk(exported)
 
 
-def export_for_layers(params: Params, qcfg: QuantConfig) -> Params:
+def export_for_layers(params: Params, plan_or_qcfg) -> Params:
     """export_model with layer-stacked subtrees handled under vmap."""
+    plan = _as_plan(plan_or_qcfg)
     out = {}
     for k, v in params.items():
         if k in ("layers", "enc_layers", "dec_layers", "tail"):
-            out[k] = jax.vmap(lambda lp: _walk(lp, qcfg))(v)
+            out[k] = jax.vmap(lambda lp: _walk(lp, plan))(v)
         elif k in STREAM_KEYS:
             continue
         elif _is_qlinear(v):
-            out[k] = _export_node(k, v, params, qcfg)
+            out[k] = _export_node(k, v, params, plan)
         else:
-            out[k] = _walk(v, qcfg)
+            out[k] = _walk(v, plan)
+    return out
+
+
+def find_exported_linears(tree, prefix: tuple = ()) -> list[tuple]:
+    """Paths of every exported *linear* ({q, s_wr} with a matmul-shaped q —
+    convs are 4-D and excluded) in an artifact tree."""
+    out: list[tuple] = []
+    if isinstance(tree, dict):
+        if "q" in tree and "s_wr" in tree:
+            # matmul-shaped: s_wr covers all but the [in, out] axes of q.
+            # conv kernels ([kh, kw, cin, cout] with per-cout s_wr) fail this.
+            if tree["s_wr"].ndim >= tree["q"].ndim - 2:
+                out.append(prefix)
+            return out
+        for k, v in tree.items():
+            out.extend(find_exported_linears(v, prefix + (k,)))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.extend(find_exported_linears(v, prefix + (i,)))
+    return out
+
+
+def kernel_route_check(exported: Params, plan: DeployPlan) -> dict | None:
+    """Drive ONE exported linear through kernels.ops.qlinear_deployed under
+    the plan and compare against the dequantized reference matmul.
+
+    Returns {path, pallas, max_err} — ``pallas`` says whether the Pallas
+    quant_matmul kernel actually ran (int8/unpacked exports take the
+    reference branch regardless of the plan), so the metric can't silently
+    report kernel parity that never exercised the kernel.  None if the
+    artifact has no matmul-shaped linear (e.g. conv-only models with no
+    packed fc).
+    """
+    from ..kernels.ops import pallas_tiles_ok, qlinear_deployed
+    paths = find_exported_linears(exported)
+    if not paths:
+        return None
+    M = 4                                     # probe batch rows
+
+    def leaf(path):
+        ex = exported
+        for k in path:
+            ex = ex[k]
+        return ex
+
+    def unstack(ex):
+        while ex["q"].ndim > 2:
+            ex = jax.tree.map(lambda l: l[0], ex)
+        return ex
+
+    def reaches_kernel(ex):
+        # packed + evenly-tiling shapes — what actually runs the kernel
+        if ex["q"].dtype != jnp.uint8:
+            return False
+        return pallas_tiles_ok(M, ex["q"].shape[-1], ex["q"].shape[-2] * 2)
+
+    # prefer a linear that genuinely reaches the Pallas kernel
+    chosen = None
+    for path in paths:
+        ex = unstack(leaf(path))
+        if reaches_kernel(ex):
+            chosen = (path, ex)
+            break
+        if chosen is None:
+            chosen = (path, ex)
+    path, ex = chosen
+    w = dof.dequantize_export(ex, jnp.float32,
+                              packed=ex["q"].dtype == jnp.uint8)
+    x = jax.random.normal(jax.random.PRNGKey(0), (M, w.shape[0]), jnp.float32)
+    y = qlinear_deployed(x, ex, plan=plan)
+    y_ref = x @ w
+    if "b" in ex:
+        y_ref = y_ref + ex["b"]
+    return {"path": ".".join(str(p) for p in path),
+            "pallas": bool(plan.use_pallas and reaches_kernel(ex)),
+            "max_err": float(jnp.max(jnp.abs(y - y_ref)))}
+
+
+def _effective_node(name: str, node: Params, parent: Params,
+                    plan: DeployPlan, dtype) -> Params:
+    out: Params = {"w": dof.effective_weight(
+        node, plan.qcfg, _stream_log_sa(name, parent),
+        compute_dtype=dtype, bits=plan.bits_for(name))}
+    if "b" in node:
+        out["b"] = node["b"]
+    return out
+
+
+def effective_view(params: Params, plan_or_qcfg,
+                   dtype=jnp.float32) -> Params:
+    """Fake-quant (training-time) weights in deploy_view's tree structure.
+
+    The oracle for export fidelity: deploy_view(export_for_layers(p)) must
+    match effective_view(p) leaf-for-leaf up to float tolerance.
+    """
+    plan = _as_plan(plan_or_qcfg)
+    qcfg = plan.qcfg
+
+    def walk(tree, key=""):
+        if isinstance(tree, dict):
+            if "w" in tree and "log_s" in tree:      # quantized embedding
+                s = jnp.exp(tree["log_s"])
+                return {"w": fake_quant(tree["w"], s, qcfg.embed_bits,
+                                        signed=True).astype(jnp.float32)}
+            out = {}
+            for k, v in tree.items():
+                if k in STREAM_KEYS:
+                    continue
+                if _is_qlinear(v):
+                    out[k] = _effective_node(k, v, tree, plan, dtype)
+                else:
+                    out[k] = walk(v, k)
+            return out
+        if isinstance(tree, (list, tuple)):
+            return type(tree)(walk(v) for v in tree)
+        return tree
+
+    out = {}
+    for k, v in params.items():
+        if k in ("layers", "enc_layers", "dec_layers", "tail"):
+            out[k] = jax.vmap(lambda lp: walk(lp))(v)
+        elif k in STREAM_KEYS:
+            continue
+        elif _is_qlinear(v):
+            out[k] = _effective_node(k, v, params, plan, dtype)
+        else:
+            out[k] = walk(v)
     return out

@@ -11,7 +11,6 @@ finishes (new requests admitted at the next wave boundary).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +18,7 @@ import jax.numpy as jnp
 from ..core.qconfig import QuantConfig
 from ..models import forward, init_cache
 from ..models.config import ModelConfig
-from .deploy import deploy_view, export_for_layers
+from .deploy import DeployPlan, deploy_view, export_for_layers, make_deploy_plan
 
 
 @dataclasses.dataclass
@@ -37,13 +36,35 @@ class ServeConfig:
 
 
 class Engine:
+    """Serves a deployment artifact under its DeployPlan.
+
+    Construct either from trained student params (exports inline) or — the
+    pipeline path — from an already-exported artifact via ``from_artifact``.
+    """
+
     def __init__(self, cfg: ModelConfig, qcfg: QuantConfig, student_params,
-                 scfg: ServeConfig = ServeConfig()):
+                 scfg: ServeConfig = ServeConfig(),
+                 plan: DeployPlan | None = None):
+        plan = plan or make_deploy_plan(qcfg, arch=cfg.name, family=cfg.family)
+        exported = jax.jit(lambda p: export_for_layers(p, plan))(student_params)
+        self._setup(cfg, plan, exported, scfg)
+
+    @classmethod
+    def from_artifact(cls, cfg: ModelConfig, plan: DeployPlan, exported,
+                      scfg: ServeConfig = ServeConfig()) -> "Engine":
+        """Build the engine from an exported artifact + its deploy plan
+        (no re-export; what launch/serve and the pipeline's serve-smoke use)."""
+        self = cls.__new__(cls)
+        self._setup(cfg, plan, exported, scfg)
+        return self
+
+    def _setup(self, cfg: ModelConfig, plan: DeployPlan, exported,
+               scfg: ServeConfig) -> None:
         self.cfg = cfg
         self.scfg = scfg
-        self.qcfg = qcfg
-        exported = jax.jit(lambda p: export_for_layers(p, qcfg))(student_params)
-        self.params = jax.jit(lambda e: deploy_view(e, qcfg))(exported)
+        self.plan = plan
+        self.qcfg = plan.qcfg
+        self.params = jax.jit(lambda e: deploy_view(e, plan))(exported)
         self.exported = exported
 
         def _prefill(params, cache, tokens):

@@ -17,10 +17,9 @@ Baseline policy (paper-faithful system, before §Perf hillclimbing):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..models.config import ModelConfig

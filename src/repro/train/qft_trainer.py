@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Iterable
+from typing import Any, Iterable
 
 import jax
 import jax.numpy as jnp
@@ -28,8 +28,8 @@ from ..core.mmse import ppq_scale
 from ..core.qconfig import Granularity, QuantConfig
 from ..models import forward, init_model
 from ..models.config import ModelConfig
-from ..optim.adam import Adam, paper_recipe
-from ..serve.deploy import STREAM_OF, STREAM_KEYS, _is_qlinear
+from ..optim.adam import paper_recipe
+from ..serve.deploy import STREAM_OF, _is_qlinear
 from .steps import make_train_step
 
 Params = dict[str, Any]
@@ -200,6 +200,49 @@ def cle_init_student(student: Params, cfg: ModelConfig,
     return out
 
 
+def build_student(key, cfg: ModelConfig, qcfg: QuantConfig,
+                  teacher: Params) -> Params:
+    """Stage: fake-quantized student skeleton with the teacher's FP weights."""
+    student = init_model(key, cfg, qcfg)
+    return _copy_weights(student, teacher)
+
+
+def init_scales(student: Params, cfg: ModelConfig, qcfg: QuantConfig,
+                cle_init: bool = False) -> Params:
+    """Stage: MMSE/APQ weight-scale init (+ optional CLE) — run AFTER
+    calibrate_student so the S_a tie of Eq. 2 is inverted against the
+    calibrated streams."""
+    student = _init_scales_tree(student, qcfg)
+    if cle_init:
+        student = cle_init_student(student, cfg, qcfg)
+    return student
+
+
+# -------------------------------------------------------------------------
+# Step-checkpoint convention, shared by QFTTrainer.run and the pipeline's
+# CNN finetune loop: checkpoint number == completed steps.
+# -------------------------------------------------------------------------
+
+def restore_step_state(ckpt, like: dict, steps: int,
+                       resume: bool) -> tuple[dict, int]:
+    """(state, start_step) from the newest usable step checkpoint.
+
+    A checkpoint beyond the requested step count can't produce the requested
+    state — then (and with resume off / no checkpoint) train from scratch.
+    """
+    if not resume or ckpt is None:
+        return like, 0
+    latest = ckpt.latest_step()
+    if not latest or latest > steps:
+        return like, 0
+    return ckpt.restore(latest, like), latest
+
+
+def step_ckpt_due(completed: int, every: int, steps: int) -> bool:
+    """Periodic save points; the final state is saved separately at ``steps``."""
+    return completed % every == 0 and completed < steps
+
+
 @dataclasses.dataclass
 class QFTConfig:
     epochs: int = 12                  # paper
@@ -234,25 +277,28 @@ class QFTTrainer:
 
     # -------------------------------------------------------------- prepare
     def prepare_student(self, key, calib_batches: Iterable[dict]) -> Params:
-        student = init_model(key, self.cfg, self.qcfg)
-        student = _copy_weights(student, self.teacher)
+        student = build_student(key, self.cfg, self.qcfg, self.teacher)
         # order matters: calibrate S_a first, THEN invert Eq. 2 for S_wR
         student = calibrate_student(student, self.cfg, self.qcfg,
                                     self.teacher, calib_batches)
-        student = _init_scales_tree(student, self.qcfg)
-        if self.qft.cle_init:
-            student = cle_init_student(student, self.cfg, self.qcfg)
-        return student
+        return init_scales(student, self.cfg, self.qcfg,
+                           cle_init=self.qft.cle_init)
 
     # ------------------------------------------------------------------ run
     def run(self, student: Params, data: Iterable[dict], steps: int,
-            log_every: int = 50, ckpt=None) -> tuple[Params, list[dict]]:
-        opt_state = self.opt.init(student)
+            log_every: int = 50, ckpt=None,
+            resume: bool = False) -> tuple[Params, list[dict]]:
+        state, start = restore_step_state(
+            ckpt, {"student": student, "opt": self.opt.init(student)},
+            steps, resume)
+        student, opt_state = state["student"], state["opt"]
         jit_step = jax.jit(self.train_step, donate_argnums=(0, 1))
         history = []
         it = iter(data)
+        for _ in range(start):      # fast-forward: deterministic streams
+            next(it)                # replay the same batch per step index
         t0 = time.time()
-        for s in range(steps):
+        for s in range(start, steps):
             batch = next(it)
             batch = {k: jnp.asarray(v) for k, v in batch.items()}
             student, opt_state, metrics = jit_step(student, opt_state,
@@ -261,9 +307,10 @@ class QFTTrainer:
                 history.append({"step": s,
                                 "loss": float(metrics["loss"]),
                                 "t": time.time() - t0})
-            if ckpt is not None and s and s % self.qft.checkpoint_every == 0:
-                ckpt.save(s, {"student": student, "opt": opt_state},
+            if ckpt is not None and step_ckpt_due(
+                    s + 1, self.qft.checkpoint_every, steps):
+                ckpt.save(s + 1, {"student": student, "opt": opt_state},
                           blocking=False)
-        if ckpt is not None:
+        if ckpt is not None and steps > start:
             ckpt.save(steps, {"student": student, "opt": opt_state})
         return student, history

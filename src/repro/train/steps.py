@@ -7,8 +7,6 @@ prefill/decode = the deployed inference graph (serve/).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

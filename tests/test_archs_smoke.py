@@ -1,8 +1,15 @@
 """Per-architecture smoke tests: reduced config, one forward + one QFT train
-step on CPU, asserting output shapes and no NaNs (assignment requirement)."""
+step on CPU, asserting output shapes and no NaNs (assignment requirement).
+
+The full 10-arch sweep takes several minutes on CPU, so it lives in the slow
+tier (``pytest -m slow``); the fast tier covers dense + CNN end to end via
+tests/test_pipeline.py and the serve/MoE/SSM paths via test_serve_and_moe.py.
+"""
 import jax
 import jax.numpy as jnp
 import pytest
+
+pytestmark = pytest.mark.slow
 
 from repro.configs import ARCH_IDS, get_config
 from repro.core import deployment_oriented, backbone_l2

@@ -3,14 +3,13 @@ gradient flow to every DoF, CLE reframing equivalence (Appendix D)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
+
 
 from repro.core import (QuantConfig, Granularity, apq_init_qlinear,
-                        cle_factors, dof, effective_weight, export_qlinear,
+                        effective_weight, export_qlinear,
                         dequantize_export, init_qlinear, init_stream,
                         mmse_init_qlinear, permissive, qlinear)
 from repro.core import dof as dof_mod
-from repro.core.fakequant import fake_quant
 
 
 def test_outer_product_scale_structure():

@@ -2,10 +2,14 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dev dependency (pip install .[dev])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (apq_scales, fake_quant, mmse_ch, mmse_dch, mmse_error,
-                        mmse_lw, pack_int4, ppq_scale, qrange, quantize,
+                        mmse_lw, pack_int4, ppq_scale, qrange,
                         unpack_int4)
 
 _f = st.floats(min_value=-4.0, max_value=4.0, allow_nan=False,

@@ -87,3 +87,36 @@ def test_qlinear_deployed_matches_effective_weight():
     w_eff = dof.effective_weight(p, cfg, compute_dtype=jnp.float32)
     np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(x @ w_eff),
                                rtol=2e-4, atol=2e-4)
+
+
+def test_qlinear_deployed_consumes_deploy_plan():
+    """The plan object routes the kernel (use_pallas/interpret) — same math."""
+    from repro.core import dof, permissive
+    from repro.kernels.ops import qlinear_deployed
+    from repro.serve.deploy import make_deploy_plan
+    cfg = permissive()
+    key = jax.random.PRNGKey(1)
+    p = dof.mmse_init_qlinear(dof.init_qlinear(key, 64, 32, cfg), cfg)
+    x = jax.random.normal(key, (4, 64), jnp.float32)
+    ex = dof.export_qlinear(p, cfg)
+    plan = make_deploy_plan(cfg, use_pallas=True, interpret=True)
+    y_plan = qlinear_deployed(x, ex, plan=plan)
+    w_eff = dof.effective_weight(p, cfg, compute_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(y_plan), np.asarray(x @ w_eff),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_qlinear_deployed_int8_exempt_layer():
+    """Unpacked int8 exports (exempt layers) take the dequant-matmul branch."""
+    from repro.core import dof, permissive
+    from repro.kernels.ops import qlinear_deployed
+    cfg = permissive()
+    key = jax.random.PRNGKey(2)
+    p = dof.mmse_init_qlinear(dof.init_qlinear(key, 32, 16, cfg), cfg, bits=8)
+    x = jax.random.normal(key, (4, 32), jnp.float32)
+    ex = dof.export_qlinear(p, cfg, bits=8)
+    assert ex["q"].dtype == jnp.int8                   # not nibble-packed
+    y = qlinear_deployed(x, ex)
+    w_eff = dof.effective_weight(p, cfg, compute_dtype=jnp.float32, bits=8)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w_eff),
+                               rtol=2e-4, atol=2e-4)

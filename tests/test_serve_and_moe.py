@@ -107,6 +107,7 @@ def test_ssm_long_context_decode_is_o1_state():
     assert sum(sizes) < 10_000       # no sequence-length dimension anywhere
 
 
+@pytest.mark.slow
 def test_ep_shard_map_matches_sorted_dispatch():
     """sharding/ep.py all-to-all EP dispatch ≡ in-graph sorted dispatch.
 
@@ -120,9 +121,9 @@ def test_ep_shard_map_matches_sorted_dispatch():
         from repro.models.config import ModelConfig, MoEConfig
         from repro.models.moe import init_moe, moe_sorted
         from repro.sharding.ep import make_ep_moe
+        from repro.launch.mesh import _make_mesh, mesh_context
         from repro.core import deployment_oriented
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = _make_mesh((2, 4), ("data", "model"))
         qcfg = deployment_oriented()
         cfg = ModelConfig(name="m", family="moe", n_layers=1, d_model=32,
                           n_heads=4, n_kv_heads=4, d_ff=0, vocab=64,
@@ -133,7 +134,7 @@ def test_ep_shard_map_matches_sorted_dispatch():
         p = init_moe(key, cfg, qcfg)
         x = jax.random.normal(key, (2, 16, 32), jnp.float32)
         y_ref = moe_sorted(x.reshape(-1, 32), p, cfg, qcfg).reshape(2, 16, 32)
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             moe_fn = make_ep_moe(mesh, cfg, qcfg, dp_axes=("data",))
             y = jax.jit(lambda x, p: moe_fn(x, p))(x, p)
             g = jax.jit(jax.grad(lambda p, x: jnp.sum(moe_fn(x, p)**2)))(p, x)

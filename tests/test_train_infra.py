@@ -36,6 +36,7 @@ def _deg(student, teacher, qcfg, batch):
     return float(backbone_l2(hs, ht))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("qcfg", [deployment_oriented(), permissive()],
                          ids=["W4A8lw", "W4dchw"])
 def test_qft_reduces_distillation_loss(qcfg):
@@ -46,6 +47,7 @@ def test_qft_reduces_distillation_loss(qcfg):
     assert d1 < d0 * 0.85, (d0, d1)
 
 
+@pytest.mark.slow
 def test_freeze_scales_trains_weights_only():
     qcfg = permissive()
     key = jax.random.PRNGKey(0)
@@ -106,6 +108,38 @@ def test_elastic_restart_with_injected_failure(tmp_path):
     assert runner.events[0]["step"] == 7
     # restored at 5, re-ran 5..12 → x counts total successful steps
     assert float(state["x"]) == 12.0
+
+
+@pytest.mark.slow
+def test_qft_run_resumes_from_step_checkpoint(tmp_path):
+    """Crash mid-finetune → rerun with resume=True restores (student, opt) at
+    the last step checkpoint and replays only the remaining steps, landing on
+    the same state as the uninterrupted run."""
+    import shutil
+    qcfg = permissive()
+    key = jax.random.PRNGKey(0)
+    teacher = init_model(key, TINY, None)
+
+    def fresh():
+        data = CalibDataset(CalibConfig(n_samples=64, seq_len=16,
+                                        batch_size=8, vocab=128))
+        tr = QFTTrainer(TINY, qcfg, teacher,
+                        QFTConfig(checkpoint_every=2), steps_per_epoch=8)
+        return tr, tr.prepare_student(key, [next(iter(data))]), data
+
+    ckpt = CheckpointManager(str(tmp_path), keep=5)
+    tr, student, data = fresh()
+    s1, _ = tr.run(student, data, steps=4, log_every=1, ckpt=ckpt)
+    ckpt.wait()
+    assert ckpt.all_steps() == [2, 4]
+    shutil.rmtree(tmp_path / "step_0000000004")      # simulate crash after 2
+    tr2, student2, data2 = fresh()
+    s2, hist = tr2.run(student2, data2, steps=4, log_every=1, ckpt=ckpt,
+                       resume=True)
+    assert hist[0]["step"] == 2                      # steps 0-1 not replayed
+    np.testing.assert_allclose(
+        np.asarray(s2["layers"]["mlp"]["up"]["w"]),
+        np.asarray(s1["layers"]["mlp"]["up"]["w"]), rtol=1e-6, atol=1e-7)
 
 
 def test_gradient_compression_error_feedback():
