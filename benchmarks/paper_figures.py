@@ -14,7 +14,8 @@ import numpy as np
 
 from repro.configs.paper_cnn import CONFIG as CNN_CFG
 from repro.core import (QuantConfig, Granularity, backbone_l2,
-                        deployment_oriented, mmse_ch, mmse_dch, mmse_lw,
+                        deployment_oriented, mmse_ch, mmse_dch, mmse_grp,
+                        mmse_lw,
                         permissive)
 from repro.models import forward
 from repro.models.cnn import (apq_init_qconv, forward_cnn, init_cnn,
@@ -29,20 +30,26 @@ from .common import FAST, TINY_LM, lm_data, lm_degradation, lm_teacher
 # ---------------------------------------------------------------- Fig. 3
 
 def fig3_mmse_granularity():
-    """Kernel quantization error vs scale granularity (lw ≥ ch ≥ dch)."""
+    """Kernel quantization error vs scale granularity (lw ≥ ch ≥ dch), with
+    the QLayout group point (grp, g=16) sitting on the same ladder: group
+    scales refine the in-dim so lw ≥ grp is guaranteed; grp vs ch trades
+    in- against out-resolution and is reported, not claimed."""
     rows = []
     teacher, _, _ = common.trained_cnn_teacher()
     for i, conv in enumerate(teacher["convs"]):
         w = conv["w"].reshape(-1, conv["w"].shape[-1])
         e = [float(f(w, 4)) for f in (mmse_lw, mmse_ch, mmse_dch)]
+        grp = float(mmse_grp(w, 4, 16))
         rows.append({"name": f"fig3.conv{i}", "lw": e[0], "ch": e[1],
-                     "dch": e[2],
+                     "dch": e[2], "grp16": grp,
                      "claim_lw>=ch>=dch": e[0] >= e[1] - 1e-6 >= 0
                      and e[1] >= e[2] - 1e-3 * e[1]})
     lm = lm_teacher()
     w = lm["layers"]["mlp"]["up"]["w"][0]
     e = [float(f(w, 4)) for f in (mmse_lw, mmse_ch, mmse_dch)]
+    grp = float(mmse_grp(w, 4, 16))
     rows.append({"name": "fig3.lm_up", "lw": e[0], "ch": e[1], "dch": e[2],
+                 "grp16": grp,
                  "claim_lw>=ch>=dch": e[0] >= e[1] >= e[2] - 1e-3 * e[1]})
     return rows
 

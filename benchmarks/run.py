@@ -15,6 +15,51 @@ import jax
 import jax.numpy as jnp
 
 
+def _quant_matmul_layout_bench() -> list[dict]:
+    """quant_matmul micro-bench: channel vs group:128 right-scale layouts.
+
+    Times the Pallas kernel (interpret on CPU — body-correctness cost, not TPU
+    perf) and the XLA reference under both layouts at a serving-ish tile
+    (M=128, K=512, N=128), plus the ratio row that starts the layout-overhead
+    perf trajectory.  Rows land in benchmarks/results/BENCH_kernels.json.
+    """
+    from repro.core.fakequant import pack_int4
+    from repro.kernels import quant_matmul
+    from repro.kernels import ref
+    from .common import RESULTS, timed
+    key = jax.random.PRNGKey(0)
+    M, K, N, g = 128, 512, 128, 128
+    x = jax.random.normal(key, (M, K), jnp.float32)
+    qw = pack_int4(jax.random.randint(key, (K, N), -7, 8).astype(jnp.int8), 0)
+    swl = jnp.full((K,), 0.02)
+    swr_ch = jnp.exp(jax.random.normal(key, (N,)) * 0.1)
+    swr_grp = jnp.exp(jax.random.normal(key, (K // g, N)) * 0.1)
+    flops = 2 * M * K * N
+    rows = []
+    for tag, fn, args in [
+        ("xla_ref.channel", jax.jit(ref.quant_matmul_ref),
+         (x, qw, swl, swr_ch)),
+        ("xla_ref.group128", jax.jit(ref.quant_matmul_ref),
+         (x, qw, swl, swr_grp)),
+        ("pallas_interpret.channel",
+         lambda *a: quant_matmul(*a, interpret=True), (x, qw, swl, swr_ch)),
+        ("pallas_interpret.group128",
+         lambda *a: quant_matmul(*a, interpret=True), (x, qw, swl, swr_grp)),
+    ]:
+        us = timed(fn, *args)
+        rows.append({"name": f"kernel.quant_matmul.{tag}", "us_per_call": us,
+                     "derived": f"{flops / us / 1e3:.1f}MFLOP/s",
+                     "M": M, "K": K, "N": N, "group": g})
+    us = {r["name"].split(".", 2)[-1]: r["us_per_call"] for r in rows}
+    rows.append({"name": "kernel.quant_matmul.group_overhead",
+                 "us_per_call": 0.0,
+                 "derived": (f"xla={us['xla_ref.group128'] / us['xla_ref.channel']:.3f}x;"
+                             f"interp={us['pallas_interpret.group128'] / us['pallas_interpret.channel']:.3f}x")})
+    out = RESULTS / "BENCH_kernels.json"
+    out.write_text(json.dumps(rows, indent=1, default=str))
+    return rows
+
+
 def _kernel_timings() -> list[dict]:
     """µs/call for the three Pallas kernels (interpret) vs jnp oracles."""
     from repro.core.fakequant import pack_int4
@@ -54,6 +99,7 @@ def main() -> None:
         ("fig8_cle_2x2", F.fig8_cle_2x2),
         ("fig9_dch_training", F.fig9_dch_training),
         ("kernel_timings", _kernel_timings),
+        ("quant_matmul_layouts", _quant_matmul_layout_bench),
     ]
     print("name,us_per_call,derived")
     for name, fn in benches:

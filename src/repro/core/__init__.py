@@ -1,11 +1,15 @@
 """QFT core: the paper's contribution as composable JAX modules."""
-from .qconfig import QuantConfig, Granularity, deployment_oriented, permissive
+from .qconfig import (QuantConfig, Granularity, QLayout, deployment_oriented,
+                      permissive)
 from .fakequant import (ste_round, fake_quant, fake_quant_act, quantize,
-                        dequantize, pack_int4, unpack_int4, qrange)
-from .mmse import ppq_scale, apq_scales, mmse_lw, mmse_ch, mmse_dch, mmse_error
+                        dequantize, pack_int4, unpack_int4, qrange,
+                        expand_group_scale)
+from .mmse import (ppq_scale, ppq_scale_grouped, apq_scales, mmse_lw, mmse_ch,
+                   mmse_dch, mmse_grp, mmse_error)
 from .dof import (init_stream, init_qlinear, qlinear, effective_weight,
                   weight_scale, stream_fake_quant, mmse_init_qlinear,
-                  apq_init_qlinear, export_qlinear, dequantize_export)
+                  apq_init_qlinear, export_qlinear, dequantize_export,
+                  swr_layout_kind)
 from .cle import cle_factors, apply_cle_to_stream
 from .distill import backbone_l2, logits_ce, qft_loss
 from .policy import select_exempt_layers, bits_for_layer

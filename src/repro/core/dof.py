@@ -19,6 +19,12 @@ is *computed* from these in the forward pass; a single STE on each
 natively — no LSQ-style custom gradients (paper's key simulation claim).
 
 Scales are parameterized in log-domain (positivity; see DESIGN.md §9.2).
+
+The S_wR granularity is a descriptor (core.qconfig.QLayout): layerwise and
+per-out-channel as in the paper, plus group-wise ``[in/g, out]`` scales — the
+W4 deployment layout.  A linear's layout is carried entirely by its
+``log_swr`` shape (see swr_layout_kind), so every routine here is
+layout-generic.
 """
 from __future__ import annotations
 
@@ -27,11 +33,26 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from .fakequant import fake_quant, fake_quant_act, pack_int4, quantize
-from .mmse import apq_scales, ppq_scale
-from .qconfig import QuantConfig
+from .fakequant import (expand_group_scale, fake_quant, fake_quant_act,
+                        pack_int4, quantize)
+from .mmse import apq_scales, ppq_scale, ppq_scale_grouped
+from .qconfig import QLayout, QuantConfig
 
 Params = dict[str, Any]
+
+
+def swr_layout_kind(w: jax.Array, log_swr: jax.Array) -> str:
+    """Infer a linear's scale layout (QLayout kind) from its parameter shapes.
+
+    After init the ``log_swr`` shape IS the layout — ``w.ndim - log_swr.ndim``
+    is 2 for layerwise (scalar), 1 for channel ([out]), 0 for group
+    ([in/g, out]); leading expert/layer-stacked axes shift both equally.
+    Every layout-generic routine (MMSE fit, scale expansion, export decode)
+    branches on this, so per-layer overrides need no side-channel.
+    """
+    diff = w.ndim - log_swr.ndim
+    assert 0 <= diff <= 2, (w.shape, log_swr.shape)
+    return ("group", "channel", "layerwise")[diff]
 
 
 # ---------------------------------------------------------------------------
@@ -68,10 +89,15 @@ def stream_fake_quant(x: jax.Array, stream: Params, cfg: QuantConfig) -> jax.Arr
 
 def init_qlinear(key: jax.Array, d_in: int, d_out: int, cfg: QuantConfig | None,
                  bias: bool = False, w_init_scale: float | None = None,
-                 expert_dim: int | None = None, w_bits: int | None = None) -> Params:
+                 expert_dim: int | None = None, w_bits: int | None = None,
+                 name: str | None = None,
+                 layout: QLayout | None = None) -> Params:
     """Create master weights + scale DoF.  ``expert_dim`` stacks E experts.
 
     ``w_bits`` overrides cfg.w_bits for exempted (8-bit) layers.
+    ``name`` keys the per-linear layout override in cfg.layout_overrides;
+    ``layout`` overrides both.  The chosen layout determines the ``log_swr``
+    shape — the single source of truth every later stage infers it from.
     """
     shape = (d_in, d_out) if expert_dim is None else (expert_dim, d_in, d_out)
     std = w_init_scale if w_init_scale is not None else d_in ** -0.5
@@ -83,27 +109,37 @@ def init_qlinear(key: jax.Array, d_in: int, d_out: int, cfg: QuantConfig | None,
         bits = w_bits or cfg.w_bits   # NOT stored in params (kept static in
         # the quant plan and passed at apply time) so layer pytrees stay
         # pure-array and vmap/scan-stackable.
-        swr_shape: tuple[int, ...]
-        if cfg.swr_per_channel:
-            swr_shape = (d_out,) if expert_dim is None else (expert_dim, d_out)
-        else:
-            swr_shape = () if expert_dim is None else (expert_dim,)
+        layout = layout or cfg.layout_for(name)
+        swr_shape = layout.swr_shape(d_in, d_out, expert_dim)
         # init refined by mmse_init_qlinear(); a sane default for fresh nets:
         p["log_swr"] = jnp.full(swr_shape, jnp.log(std / (2 ** (bits - 1) - 1)),
                                 dtype=jnp.float32)
     return p
 
 
+def _swr_dense(p: Params) -> jax.Array:
+    """exp(log_swr) broadcastable against ``w`` under any layout."""
+    w, log_swr = p["w"], p["log_swr"]
+    kind = swr_layout_kind(w, log_swr)
+    if kind == "layerwise":
+        s = jnp.exp(log_swr)
+        return s[..., None, None] if log_swr.ndim else s
+    if kind == "channel":
+        return jnp.exp(log_swr)[..., None, :]              # [*, 1, out]
+    # group: [*, in/g, out] block-broadcast to [*, in, out]
+    return expand_group_scale(jnp.exp(log_swr), w.shape[-2], axis=-2)
+
+
 def weight_scale(p: Params, log_sa_in: jax.Array | None) -> jax.Array:
-    """S_w = S_wL ⊗ S_wR with S_wL = 1/S_a_in (Eq. 2).  Broadcasts experts."""
-    log_swr = p["log_swr"]
-    expert_stacked = p["w"].ndim == 3
-    if log_swr.ndim == 0 or (expert_stacked and log_swr.ndim == 1):
-        s_wr = jnp.exp(log_swr)[..., None, None] if expert_stacked else jnp.exp(log_swr)
-    else:
-        s_wr = jnp.exp(log_swr)[..., None, :]  # [*, 1, out]
+    """S_w = S_wL ⊗ S_wR with S_wL = 1/S_a_in (Eq. 2).  Broadcasts experts.
+
+    Group layouts relax the rank-1 structure along the in-dim blockwise:
+    S_w[m, n] = S_wL[m] · S_wR[⌊m/g⌋, n] (see DESIGN.md, QLayout note).
+    """
+    s_wr = _swr_dense(p)
     if log_sa_in is None:
-        return jnp.broadcast_to(s_wr, p["w"].shape) if expert_stacked else s_wr
+        return (jnp.broadcast_to(s_wr, p["w"].shape) if p["w"].ndim >= 3
+                else s_wr)
     s_wl = jnp.exp(-log_sa_in)[..., :, None]   # [..., in, 1]
     # expert/layer-stacked weights: the stream scale is shared across the
     # stacked axes between the leading dims and [in, out] — insert them
@@ -163,17 +199,25 @@ def mmse_init_qlinear(p: Params, cfg: QuantConfig, bits: int | None = None,
     W' = W ⊙ S_a[:,None] (equivalently: F̂ solved from Eq. 2 given S_a and the
     MMSE-optimal total scale).  Ignoring the tie mis-scales the grid by S_a.
 
-    lw   → scalar PPQ scale (Eq. 5a)
-    chw  → per-out-channel PPQ (Eq. 5b)
+    layerwise → scalar PPQ scale (Eq. 5a)
+    channel   → per-out-channel PPQ (Eq. 5b)
+    group(g)  → per-(in-group, out-channel) PPQ (QLayout; DESIGN.md note)
     dchw handled jointly with the stream by apq_init_qlinear().
+
+    The fit granularity is read off the existing ``log_swr`` shape (set by
+    init_qlinear from the layout), so per-layer overrides need no plumbing.
     """
     w = p["w"]
     bits = bits or cfg.w_bits
+    kind = swr_layout_kind(w, p["log_swr"])
     if log_sa_in is not None:
         w = w * jnp.exp(log_sa_in)[..., :, None]
 
     def one(wm):
-        if cfg.swr_per_channel:
+        if kind == "group":
+            s = ppq_scale_grouped(wm, bits, p["log_swr"].shape[-2],
+                                  iters=cfg.mmse_iters)      # [in/g, out]
+        elif kind == "channel":
             s = ppq_scale(wm, bits, axes=(0,), iters=cfg.mmse_iters)[0]  # [out]
         else:
             s = ppq_scale(wm, bits, axes=None, iters=cfg.mmse_iters).reshape(())
@@ -189,17 +233,40 @@ def apq_init_qlinear(p: Params, cfg: QuantConfig,
 
     The caller folds log_swl into the shared stream scale (log_sa = -log_swl);
     for fan-out streams the fold is a weighted geometric mean across siblings.
+
+    Non-channel layouts: APQ's alternation stays rows × columns; once the
+    left scale has converged the right factor is re-fit at the layer's layout
+    resolution (PPQ over W/S_wL per group block, or per layer for layerwise —
+    the conditional MMSE solution for T given S, same projection as Eq. 14).
+    The log_swr shape requested at init is therefore always preserved.
     """
     w = p["w"]
     bits = bits or cfg.w_bits
+    kind = swr_layout_kind(w, p["log_swr"])
+
+    def refit(wm, log_swl):
+        """Right factor at layout resolution, conditioned on the left scale."""
+        wn = wm / jnp.exp(log_swl)[:, None]
+        if kind == "group":
+            s = ppq_scale_grouped(wn, bits, p["log_swr"].shape[-2],
+                                  iters=cfg.mmse_iters)       # [in/g, out]
+        else:                                                 # layerwise
+            s = ppq_scale(wn, bits, axes=None,
+                          iters=cfg.mmse_iters).reshape(())
+        return jnp.log(jnp.maximum(s, 1e-12))
+
     if w.ndim == 3:  # experts: APQ per expert; share S_wL via geomean
         s, t = jax.vmap(lambda we: apq_scales(we, bits, cfg.mmse_iters))(w)
         log_swl = jnp.mean(jnp.log(s[..., 0]), axis=0)        # [in]
-        log_swr = jnp.log(t[:, 0, :])                         # [E, out]
+        if kind == "channel":
+            log_swr = jnp.log(t[:, 0, :])                     # [E, out]
+        else:
+            log_swr = jax.vmap(lambda we: refit(we, log_swl))(w)
     else:
         s, t = apq_scales(w, bits, iters=cfg.mmse_iters)
         log_swl = jnp.log(s[:, 0])
-        log_swr = jnp.log(t[0, :])
+        log_swr = (jnp.log(t[0, :]) if kind == "channel"
+                   else refit(w, log_swl))
     return {**p, "log_swr": log_swr.astype(jnp.float32)}, log_swl.astype(jnp.float32)
 
 
@@ -216,7 +283,9 @@ def export_qlinear(p: Params, cfg: QuantConfig,
     compiler would burn into the accelerator binary. Used by serve/ and the
     Pallas quant_matmul kernel.  All leaves are arrays (vmap/scan-stackable);
     whether q is packed is static (bits==4 and even in-dim) and recorded by
-    the caller's deploy plan.
+    the caller's deploy plan.  ``s_wr`` carries the layer's layout in its
+    shape: scalar (layerwise), [..., out] (channel), or [..., in/g, out]
+    (group) — consumers dispatch on it, same rule as swr_layout_kind.
     """
     bits = bits or cfg.w_bits
     s = weight_scale(p, log_sa_in)
@@ -239,23 +308,31 @@ def dequantize_export(ex: Params, compute_dtype=jnp.bfloat16,
                       packed: bool = True) -> jax.Array:
     """Reference decode of an exported linear (XLA serving path / kernel oracle).
 
-    q: [..., in(/2 if packed), out]; s_wr: [..., out] or [...]; s_wl: [..., in].
+    q: [..., in(/2 if packed), out]; s_wl: [..., in];
+    s_wr: [...] (layerwise) | [..., out] (channel) | [..., in/g, out] (group).
+
+    The total scale S_wL ⊗ S_wR is assembled in f32 before touching q — the
+    same grouping as weight_scale/fake_quant on the training side — so the
+    decode is bit-exact against effective_weight in f32 (the round-trip
+    property tests assert equality, not closeness).
     """
     from .fakequant import unpack_int4
     q = ex["q"]
     if packed and q.dtype == jnp.uint8:
         q = unpack_int4(q, axis=-2)
-    w = q.astype(compute_dtype)
+    w = q.astype(jnp.float32)
     s_wr = ex["s_wr"]
     if s_wr.ndim == w.ndim - 2:          # scalar per (stacked) linear
-        w = w * s_wr[..., None, None].astype(compute_dtype)
-    else:
-        w = w * s_wr[..., None, :].astype(compute_dtype)
+        s = s_wr[..., None, None]
+    elif s_wr.ndim == w.ndim:            # group: [..., in/g, out] blockwise
+        s = expand_group_scale(s_wr, w.shape[-2], axis=-2)
+    else:                                # per-out-channel (convs broadcast
+        s = s_wr[..., None, :]           # over kh/kw too)
     if ex.get("s_wl") is not None:
-        s_wl = ex["s_wl"][..., :, None].astype(compute_dtype)
+        s_wl = ex["s_wl"][..., :, None]
         # stream scale shared across stacked expert axes (fan-out rule):
         # insert them between the leading dims and [in, out]
         while s_wl.ndim < w.ndim:
             s_wl = jnp.expand_dims(s_wl, -3)
-        w = w * s_wl
-    return w
+        s = s_wl * s
+    return (w * s).astype(compute_dtype)

@@ -70,6 +70,23 @@ def fake_quant_act(x: jax.Array, scale: jax.Array, bits: int = 8,
     return fake_quant(x, scale, bits, signed=False, zero_point=zp)
 
 
+def expand_group_scale(scale: jax.Array, dim: int, axis: int = -2) -> jax.Array:
+    """Block-broadcast per-group scales to per-element along ``axis``.
+
+    ``scale[..., n_g, ...]`` → ``[..., dim, ...]`` with each group scale
+    repeated over its block of ``dim // n_g`` consecutive elements.  The one
+    place group layouts (core.qconfig.QLayout) turn into dense broadcastable
+    scales — used by the offline subgraph (core.dof), the XLA reference matmul
+    and the deploy view; the Pallas kernel does the same expansion per tile.
+    """
+    axis = axis % scale.ndim
+    n_g = scale.shape[axis]
+    if n_g == dim:
+        return scale
+    assert dim % n_g == 0, (dim, n_g)
+    return jnp.repeat(scale, dim // n_g, axis=axis)
+
+
 def pack_int4(q: jax.Array, axis: int = -2) -> jax.Array:
     """Pack signed int4 values (as int8 in [-7, 7]) into uint8 pairs.
 

@@ -15,7 +15,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .fakequant import qrange
+from .fakequant import expand_group_scale, qrange
 
 _EPS = 1e-12
 
@@ -48,6 +48,20 @@ def ppq_scale(w: jax.Array, bits: int, axes=None, iters: int = 10) -> jax.Array:
         return jnp.where(s_new > _EPS, s_new, s)
 
     return jax.lax.fori_loop(0, iters, body, s0)
+
+
+def ppq_scale_grouped(w: jax.Array, bits: int, n_groups: int,
+                      iters: int = 10) -> jax.Array:
+    """Group-wise PPQ along the in-dim of ``W[in, out]`` → ``[n_groups, out]``.
+
+    Each (in-group, out-channel) block of ``in/n_groups`` weights is one MMSE
+    slice — the group-layout analogue of Eq. 5b, reducing over the block axis
+    only.  Used to fit ``log_swr`` for QLayout('group', g) linears.
+    """
+    K, N = w.shape
+    assert K % n_groups == 0, (K, n_groups)
+    wg = w.reshape(n_groups, K // n_groups, N)
+    return ppq_scale(wg, bits, axes=(1,), iters=iters)[:, 0, :]
 
 
 def mmse_error(w: jax.Array, scale: jax.Array, bits: int) -> jax.Array:
@@ -99,3 +113,11 @@ def mmse_dch(w: jax.Array, bits: int, iters: int = 10) -> jax.Array:
     """Doubly-channelwise MMSE error — Eq. 5c via APQ."""
     s, t = apq_scales(w, bits, iters=iters)
     return mmse_error(w, s * t, bits)
+
+
+def mmse_grp(w: jax.Array, bits: int, group: int, iters: int = 10) -> jax.Array:
+    """Group-wise MMSE error (between Eq. 5a and 5b on the granularity ladder)."""
+    K = w.shape[0]
+    n_g = K // group if K % group == 0 else 1
+    s = ppq_scale_grouped(w, bits, n_g, iters=iters)        # [n_g, out]
+    return mmse_error(w, expand_group_scale(s, K, axis=0), bits)

@@ -7,6 +7,15 @@ lw/chw/dchw × W-bits × A-bits grid:
   DoF is the cross-layer activation scale (CLE DoF), trained jointly.
 - ``permissive()``: W4, FP activations, channelwise rescale → doubly-channelwise
   kernel quantization, two vector DoF per linear.
+
+On top of the paper's granularity ladder sits the **weight-scale layout**
+(``QLayout``): the granularity of the free S_wR factor along the kernel's
+in/out axes.  ``layerwise`` and ``channel`` are the paper's two shapes;
+``group(g)`` adds the W4 deployment layout used by LLM serving stacks — one
+scale per ``g`` input channels per output channel, ``log_swr`` shaped
+``[in/g, out]``.  The layout is a descriptor, not a fork: every consumer
+(init, MMSE fit, fake-quant, export, the Pallas kernel) reads the scale's
+shape, so new granularities are new descriptor values.
 """
 from __future__ import annotations
 
@@ -20,11 +29,80 @@ class Granularity(enum.Enum):
     DCHW = "dchw"    # chw + live CLE DoF → S_wL ⊗ S_wR (Corollary 2)
 
 
+_LAYOUT_KINDS = ("layerwise", "channel", "group")
+
+
+@dataclasses.dataclass(frozen=True)
+class QLayout:
+    """Granularity descriptor for the free weight-scale DoF (S_wR).
+
+    kind:
+      ``layerwise`` — one scalar per linear (``log_swr`` shape ``()``)
+      ``channel``   — one scale per out-channel (``[out]``)
+      ``group``     — one scale per (in-group, out-channel) block
+                      (``[in/group, out]``); ``group`` is the block length
+                      along the in-dim.
+
+    When ``group`` does not divide a layer's in-dim the layer falls back to a
+    single group spanning the whole in-dim (= channel granularity, but kept in
+    the 2-D group shape so the code path stays uniform).
+    """
+    kind: str = "channel"
+    group: int = 0                    # in-dim block length (kind == "group")
+
+    def __post_init__(self):
+        if self.kind not in _LAYOUT_KINDS:
+            raise ValueError(f"layout kind must be one of {_LAYOUT_KINDS}, "
+                             f"got {self.kind!r}")
+        if self.kind == "group" and self.group <= 0:
+            raise ValueError(f"group layout needs a positive group size, "
+                             f"got {self.group}")
+
+    # ------------------------------------------------------------- parsing
+    @classmethod
+    def parse(cls, spec: "QLayout | str") -> "QLayout":
+        """``"layerwise" | "channel" | "group:<g>"`` (CLI spelling) → QLayout."""
+        if isinstance(spec, cls):
+            return spec
+        s = spec.strip().lower()
+        kind, sep, g = s.partition(":")
+        if kind == "group":
+            if not (sep and g.isdigit() and int(g) > 0):
+                raise ValueError(f"group layout spec must be 'group:<size>', "
+                                 f"got {spec!r}")
+            return cls("group", int(g))
+        if sep:
+            raise ValueError(f"only group layouts take a size, got {spec!r}")
+        return cls(kind)
+
+    def __str__(self) -> str:
+        return f"group:{self.group}" if self.kind == "group" else self.kind
+
+    # ------------------------------------------------------------- shapes
+    def n_groups(self, d_in: int) -> int:
+        """Number of scale blocks along the in-dim (group layout only)."""
+        assert self.kind == "group"
+        return d_in // self.group if d_in % self.group == 0 else 1
+
+    def swr_shape(self, d_in: int, d_out: int,
+                  expert_dim: int | None = None) -> tuple[int, ...]:
+        """The ``log_swr`` parameter shape for a ``[d_in, d_out]`` kernel."""
+        lead = () if expert_dim is None else (expert_dim,)
+        if self.kind == "layerwise":
+            return lead
+        if self.kind == "channel":
+            return lead + (d_out,)
+        return lead + (self.n_groups(d_in), d_out)
+
+
 @dataclasses.dataclass(frozen=True)
 class QuantConfig:
     w_bits: int = 4
     a_bits: int | None = 8            # None → FP activations ("permissive")
     granularity: Granularity = Granularity.DCHW
+    w_layout: QLayout | None = None   # None → derived from granularity
+    #: per-linear layout overrides: ((linear name, QLayout | spec str), ...)
+    layout_overrides: tuple = ()
     exempt_bits: int = 8              # bits for exempted (smallest-1%) layers
     exempt_frac: float = 0.01         # cumulative weight-bytes fraction kept at
                                       # exempt_bits (paper's flat 1% rule, §4)
@@ -33,8 +111,29 @@ class QuantConfig:
     mmse_iters: int = 10              # PPQ/APQ iterations at init
 
     @property
+    def layout(self) -> QLayout:
+        """The resolved default weight-scale layout.
+
+        Explicit ``w_layout`` wins; otherwise the paper's granularity ladder
+        maps to its two shapes (lw → layerwise, chw/dchw → channel).
+        """
+        if self.w_layout is not None:
+            return QLayout.parse(self.w_layout)
+        if self.granularity is Granularity.LW:
+            return QLayout("layerwise")
+        return QLayout("channel")
+
+    def layout_for(self, name: str | None) -> QLayout:
+        """Per-linear layout: overrides from the quant plan, else the default."""
+        if name is not None:
+            for n, layout in self.layout_overrides:
+                if n == name:
+                    return QLayout.parse(layout)
+        return self.layout
+
+    @property
     def swr_per_channel(self) -> bool:
-        return self.granularity is not Granularity.LW
+        return self.layout.kind != "layerwise"
 
     @property
     def act_quant(self) -> bool:

@@ -9,6 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..core.fakequant import expand_group_scale
 from . import ref
 from .fake_quant import fake_quant_kernel
 from .flash_attention import flash_attention
@@ -16,19 +17,26 @@ from .quant_matmul import quant_matmul
 
 
 def pallas_tiles_ok(M: int, N: int, K: int, bm: int = 128, bn: int = 128,
-                    bk: int = 256) -> bool:
-    """quant_matmul requires every dim to tile by its (clamped) block size."""
+                    bk: int = 256, n_groups: int | None = None) -> bool:
+    """quant_matmul requires every dim to tile by its (clamped) block size;
+    group layouts additionally need whole groups per K-tile (bk % g == 0)."""
     bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
-    return M % bm == 0 and N % bn == 0 and K % bk == 0
+    if not (M % bm == 0 and N % bn == 0 and K % bk == 0):
+        return False
+    if n_groups is None:
+        return True
+    return K % n_groups == 0 and bk % (K // n_groups) == 0
 
 
 def qlinear_deployed(x: jax.Array, export: dict, use_pallas: bool = False,
-                     interpret: bool = True, plan=None) -> jax.Array:
+                     interpret: bool | None = None, plan=None) -> jax.Array:
     """y = x @ dequant(export) (+b).  x: [..., K]; export from dof.export_qlinear.
 
     ``plan`` (serve.deploy.DeployPlan, duck-typed to avoid an upward import)
     overrides the kernel routing knobs — the serving engine and launchers pass
-    the same plan object the artifact was exported under.
+    the same plan object the artifact was exported under.  The layer's scale
+    layout rides in export["s_wr"]'s rank (core.dof.swr_layout_kind);
+    interpret=None auto-selects by backend inside quant_matmul.
     """
     if plan is not None:
         use_pallas, interpret = plan.use_pallas, plan.interpret
@@ -41,14 +49,17 @@ def qlinear_deployed(x: jax.Array, export: dict, use_pallas: bool = False,
     s_wr = export["s_wr"]
     if s_wr.ndim == 0:
         s_wr = jnp.broadcast_to(s_wr, (q.shape[-1],))
+    n_groups = s_wr.shape[0] if s_wr.ndim == 2 else None
     if q.dtype == jnp.uint8:                  # int4 nibble-packed
         if use_pallas and pallas_tiles_ok(x2.shape[0], q.shape[-1],
-                                          x2.shape[-1]):
+                                          x2.shape[-1], n_groups=n_groups):
             y = quant_matmul(x2, q, s_wl, s_wr, interpret=interpret)
         else:                                 # odd shapes: XLA reference path
             y = ref.quant_matmul_ref(x2, q, s_wl, s_wr)
     else:                                     # int8 / unpacked (exempt layers)
-        w = q.astype(jnp.float32) * s_wl[:, None] * s_wr[None, :]
+        s_wr_full = (expand_group_scale(s_wr, q.shape[-2], axis=0)
+                     if n_groups is not None else s_wr[None, :])
+        w = q.astype(jnp.float32) * s_wl[:, None] * s_wr_full
         y = (x2.astype(jnp.float32) @ w).astype(x.dtype)
     if "b" in export:
         y = y + export["b"].astype(y.dtype)

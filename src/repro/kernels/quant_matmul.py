@@ -6,11 +6,23 @@ paper's recode stage (DESIGN.md §2): unpack + dequantize happen in VMEM on
 MXU-aligned tiles, fused into the matmul's producer — weights never
 materialize in bf16 in HBM, cutting weight-memory traffic ~4× vs bf16.
 
+Two right-scale layouts (core.qconfig.QLayout), selected by s_wr's rank:
+
+- rank-1 (layerwise / channel): s_wr[N]; the scale matrix is the outer
+  product s_wl ⊗ s_wr and each K-step stages only a [1, bn] slice.
+- group:  s_wr[K/g, N]; the producer stages a [bk/g, bn] scale tile per
+  K-step and block-broadcasts it over each g-row band before the MXU dot.
+  Tiling constraint: ``bk % g == 0`` (a K-tile holds whole groups) — callers
+  (kernels.ops.pallas_tiles_ok) fall back to the XLA reference otherwise.
+
 Tiling: grid (M/bm, N/bn, K/bk); x tile [bm, bk] and packed-weight tile
 [bk/2, bn] are staged into VMEM per step; f32 accumulation in a VMEM scratch
 tile [bm, bn] across the K grid dimension (revisiting pattern), written out
 on the last K step.  bm/bn/bk default to 128/128/256 — MXU-aligned (128) and
 a working set of ~0.3 MB ≪ 16 MB VMEM, leaving room for double-buffering.
+
+``interpret=None`` auto-selects: the kernel body runs compiled on TPU and in
+Pallas interpret mode elsewhere (CPU tests/dry-runs).
 """
 from __future__ import annotations
 
@@ -22,9 +34,24 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+def default_interpret() -> bool:
+    """Pallas interpret mode unless we are actually on TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def _unpack_tile(packed: jax.Array) -> jax.Array:
+    """uint8 [bk//2, bn] nibble pairs → int8 [bk, bn] (interleaved rows)."""
+    lo = (packed & 0x0F).astype(jnp.int8)
+    hi = ((packed >> 4) & 0x0F).astype(jnp.int8)
+    lo = jnp.where(lo > 7, lo - 16, lo)               # sign-extend nibbles
+    hi = jnp.where(hi > 7, hi - 16, hi)
+    bk2, bn = packed.shape
+    return jnp.stack([lo, hi], axis=1).reshape(bk2 * 2, bn)
+
+
 def _qmm_kernel(x_ref, qw_ref, swl_ref, swr_ref, o_ref, acc_ref, *,
                 n_k: int):
-    """One (m, n, k) grid step.
+    """One (m, n, k) grid step — rank-1 (layerwise/channel) scales.
 
     x_ref:   [bm, bk]    bf16/f32 activations tile
     qw_ref:  [bk//2, bn] uint8 packed int4 weights tile
@@ -39,14 +66,38 @@ def _qmm_kernel(x_ref, qw_ref, swl_ref, swr_ref, o_ref, acc_ref, *,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    packed = qw_ref[...]
-    lo = (packed & 0x0F).astype(jnp.int8)
-    hi = ((packed >> 4) & 0x0F).astype(jnp.int8)
-    lo = jnp.where(lo > 7, lo - 16, lo)               # sign-extend nibbles
-    hi = jnp.where(hi > 7, hi - 16, hi)
-    bk2, bn = packed.shape
-    w = jnp.stack([lo, hi], axis=1).reshape(bk2 * 2, bn)   # interleave → [bk, bn]
+    w = _unpack_tile(qw_ref[...])
     w = w.astype(jnp.float32) * swl_ref[...] * swr_ref[...]
+
+    x = x_ref[...].astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k_step == n_k - 1)
+    def _out():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _qmm_group_kernel(x_ref, qw_ref, swl_ref, swg_ref, o_ref, acc_ref, *,
+                      n_k: int, g: int):
+    """One (m, n, k) grid step — group scales.
+
+    swg_ref: [bk//g, bn] f32 right-scale tile, one row per in-group; block-
+    broadcast over each band of g unpacked weight rows before the dot (the
+    group analogue of the rank-1 producer above).
+    """
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = _unpack_tile(qw_ref[...])                          # [bk, bn]
+    sg = swg_ref[...]                                      # [bk//g, bn]
+    n_bg, bn = sg.shape
+    sg = jnp.broadcast_to(sg[:, None, :], (n_bg, g, bn)).reshape(n_bg * g, bn)
+    w = w.astype(jnp.float32) * swl_ref[...] * sg
 
     x = x_ref[...].astype(jnp.float32)
     acc_ref[...] += jax.lax.dot_general(
@@ -61,13 +112,20 @@ def _qmm_kernel(x_ref, qw_ref, swl_ref, swr_ref, o_ref, acc_ref, *,
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
 def quant_matmul(x: jax.Array, qw: jax.Array, s_wl: jax.Array,
                  s_wr: jax.Array, bm: int = 128, bn: int = 128, bk: int = 256,
-                 interpret: bool = True) -> jax.Array:
+                 interpret: bool | None = None) -> jax.Array:
     """y = x @ dequant(qw) for int4-packed qw.
 
-    x: [M, K]; qw: [K//2, N] uint8; s_wl: [K] f32; s_wr: [N] f32 → y [M, N].
-    Shapes must tile evenly (callers pad — production shapes are MXU-aligned
-    by construction).  interpret=True validates the kernel body on CPU.
+    x: [M, K]; qw: [K//2, N] uint8; s_wl: [K] f32;
+    s_wr: [N] f32 (layerwise/channel) or [K//g, N] f32 (group layout)
+    → y [M, N].
+
+    Shapes must tile evenly, and for group scales each K-tile must hold whole
+    groups (``bk % g == 0``) — callers gate via kernels.ops.pallas_tiles_ok
+    (production shapes are MXU-aligned by construction).
+    interpret=None auto-selects by backend; True forces the CPU interpreter.
     """
+    if interpret is None:
+        interpret = default_interpret()
     M, K = x.shape
     Kh, N = qw.shape
     assert Kh * 2 == K, (K, Kh)
@@ -76,17 +134,30 @@ def quant_matmul(x: jax.Array, qw: jax.Array, s_wl: jax.Array,
     n_k = K // bk
     grid = (M // bm, N // bn, n_k)
 
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),
+        pl.BlockSpec((bk // 2, bn), lambda m, n, k: (k, n)),
+        pl.BlockSpec((bk, 1), lambda m, n, k: (k, 0)),
+    ]
+    if s_wr.ndim == 2:                        # group layout: [K//g, N]
+        n_groups = s_wr.shape[0]
+        assert K % n_groups == 0, (K, n_groups)
+        g = K // n_groups
+        assert bk % g == 0, (bk, g)
+        kernel = functools.partial(_qmm_group_kernel, n_k=n_k, g=g)
+        in_specs.append(pl.BlockSpec((bk // g, bn), lambda m, n, k: (k, n)))
+        swr_arg = s_wr
+    else:
+        kernel = functools.partial(_qmm_kernel, n_k=n_k)
+        in_specs.append(pl.BlockSpec((1, bn), lambda m, n, k: (0, n)))
+        swr_arg = s_wr[None, :]
+
     return pl.pallas_call(
-        functools.partial(_qmm_kernel, n_k=n_k),
+        kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),
-            pl.BlockSpec((bk // 2, bn), lambda m, n, k: (k, n)),
-            pl.BlockSpec((bk, 1), lambda m, n, k: (k, 0)),
-            pl.BlockSpec((1, bn), lambda m, n, k: (0, n)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
         out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
-    )(x, qw, s_wl[:, None], s_wr[None, :])
+    )(x, qw, s_wl[:, None], swr_arg)

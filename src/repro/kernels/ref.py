@@ -4,13 +4,16 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from ..core.fakequant import unpack_int4
+from ..core.fakequant import expand_group_scale, unpack_int4
 
 
 def quant_matmul_ref(x: jax.Array, qw: jax.Array, s_wl: jax.Array,
                      s_wr: jax.Array) -> jax.Array:
+    """s_wr: [N] (layerwise/channel) or [K/g, N] (group layout)."""
     w = unpack_int4(qw, axis=0).astype(jnp.float32)
-    w = w * s_wl[:, None] * s_wr[None, :]
+    s_wr = s_wr[None, :] if s_wr.ndim == 1 else expand_group_scale(
+        s_wr, w.shape[0], axis=0)
+    w = w * s_wl[:, None] * s_wr
     return (x.astype(jnp.float32) @ w).astype(x.dtype)
 
 

@@ -29,10 +29,13 @@ def init_attention(key: jax.Array, cfg: ModelConfig,
     H, Hkv = cfg.n_heads_padded, cfg.n_kv_heads_padded
     ks = jax.random.split(key, 4)
     p: Params = {
-        "wq": dof.init_qlinear(ks[0], d, H * hd, qcfg, bias=cfg.bias),
-        "wk": dof.init_qlinear(ks[1], d, Hkv * hd, qcfg, bias=cfg.bias),
-        "wv": dof.init_qlinear(ks[2], d, Hkv * hd, qcfg, bias=cfg.bias),
-        "wo": dof.init_qlinear(ks[3], H * hd, d, qcfg, bias=False),
+        "wq": dof.init_qlinear(ks[0], d, H * hd, qcfg, bias=cfg.bias,
+                               name="wq"),
+        "wk": dof.init_qlinear(ks[1], d, Hkv * hd, qcfg, bias=cfg.bias,
+                               name="wk"),
+        "wv": dof.init_qlinear(ks[2], d, Hkv * hd, qcfg, bias=cfg.bias,
+                               name="wv"),
+        "wo": dof.init_qlinear(ks[3], H * hd, d, qcfg, bias=False, name="wo"),
     }
     if cfg.qk_norm:
         p["q_norm"] = init_rmsnorm(hd)
@@ -123,12 +126,16 @@ def init_mla(key: jax.Array, cfg: ModelConfig,
     m, d, H = cfg.mla, cfg.d_model, cfg.n_heads_padded
     ks = jax.random.split(key, 6)
     p: Params = {
-        "q_down": dof.init_qlinear(ks[0], d, m.q_lora, qcfg),
-        "q_up": dof.init_qlinear(ks[1], m.q_lora, H * (m.d_nope + m.d_rope), qcfg),
-        "kv_down": dof.init_qlinear(ks[2], d, m.kv_lora + m.d_rope, qcfg),
-        "k_up": dof.init_qlinear(ks[3], m.kv_lora, H * m.d_nope, qcfg),
-        "v_up": dof.init_qlinear(ks[4], m.kv_lora, H * m.d_v, qcfg),
-        "wo": dof.init_qlinear(ks[5], H * m.d_v, d, qcfg),
+        "q_down": dof.init_qlinear(ks[0], d, m.q_lora, qcfg, name="q_down"),
+        "q_up": dof.init_qlinear(ks[1], m.q_lora, H * (m.d_nope + m.d_rope),
+                                 qcfg, name="q_up"),
+        "kv_down": dof.init_qlinear(ks[2], d, m.kv_lora + m.d_rope, qcfg,
+                                    name="kv_down"),
+        "k_up": dof.init_qlinear(ks[3], m.kv_lora, H * m.d_nope, qcfg,
+                                 name="k_up"),
+        "v_up": dof.init_qlinear(ks[4], m.kv_lora, H * m.d_v, qcfg,
+                                 name="v_up"),
+        "wo": dof.init_qlinear(ks[5], H * m.d_v, d, qcfg, name="wo"),
         "q_norm": init_rmsnorm(m.q_lora),
         "kv_norm": init_rmsnorm(m.kv_lora),
     }

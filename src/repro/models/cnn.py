@@ -219,7 +219,7 @@ def init_cnn(key, ccfg: CNNConfig, qcfg: QuantConfig | None) -> Params:
     params["convs"] = convs
     params["streams"] = streams
     params["fc"] = dof.init_qlinear(ks[-1], cin, ccfg.n_classes, qcfg,
-                                    bias=True,
+                                    bias=True, name="fc",
                                     w_bits=None if qcfg is None else qcfg.exempt_bits)
     if qcfg is not None:
         params["fc_stream"] = dof.init_stream(cin)

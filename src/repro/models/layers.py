@@ -78,11 +78,14 @@ def init_mlp(key: jax.Array, d: int, ff: int, qcfg: QuantConfig | None,
              mlp_type: str, bias: bool, bits: int | None = None) -> Params:
     ks = jax.random.split(key, 3)
     p: Params = {
-        "up": dof.init_qlinear(ks[0], d, ff, qcfg, bias=bias, w_bits=bits),
-        "down": dof.init_qlinear(ks[1], ff, d, qcfg, bias=bias, w_bits=bits),
+        "up": dof.init_qlinear(ks[0], d, ff, qcfg, bias=bias, w_bits=bits,
+                               name="up"),
+        "down": dof.init_qlinear(ks[1], ff, d, qcfg, bias=bias, w_bits=bits,
+                                 name="down"),
     }
     if mlp_type == "swiglu":
-        p["gate"] = dof.init_qlinear(ks[2], d, ff, qcfg, bias=bias, w_bits=bits)
+        p["gate"] = dof.init_qlinear(ks[2], d, ff, qcfg, bias=bias,
+                                     w_bits=bits, name="gate")
     if qcfg is not None:
         p["in_stream"] = dof.init_stream(d)    # shared by gate&up (fan-out rule)
         p["act_stream"] = dof.init_stream(ff)

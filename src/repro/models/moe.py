@@ -32,15 +32,21 @@ def init_moe(key: jax.Array, cfg: ModelConfig, qcfg: QuantConfig | None) -> Para
     ff = e.d_ff_expert
     ks = jax.random.split(key, 7)
     p: Params = {
-        "router": dof.init_qlinear(ks[0], d, E, qcfg, w_bits=e.router_bits),
-        "up": dof.init_qlinear(ks[1], d, ff, qcfg, expert_dim=E),
-        "gate": dof.init_qlinear(ks[2], d, ff, qcfg, expert_dim=E),
-        "down": dof.init_qlinear(ks[3], ff, d, qcfg, expert_dim=E),
+        "router": dof.init_qlinear(ks[0], d, E, qcfg, w_bits=e.router_bits,
+                                   name="router"),
+        "up": dof.init_qlinear(ks[1], d, ff, qcfg, expert_dim=E, name="up"),
+        "gate": dof.init_qlinear(ks[2], d, ff, qcfg, expert_dim=E,
+                                 name="gate"),
+        "down": dof.init_qlinear(ks[3], ff, d, qcfg, expert_dim=E,
+                                 name="down"),
     }
     if e.n_shared:
-        p["shared_up"] = dof.init_qlinear(ks[4], d, ff * e.n_shared, qcfg)
-        p["shared_gate"] = dof.init_qlinear(ks[5], d, ff * e.n_shared, qcfg)
-        p["shared_down"] = dof.init_qlinear(ks[6], ff * e.n_shared, d, qcfg)
+        p["shared_up"] = dof.init_qlinear(ks[4], d, ff * e.n_shared, qcfg,
+                                          name="shared_up")
+        p["shared_gate"] = dof.init_qlinear(ks[5], d, ff * e.n_shared, qcfg,
+                                            name="shared_gate")
+        p["shared_down"] = dof.init_qlinear(ks[6], ff * e.n_shared, d, qcfg,
+                                            name="shared_down")
     if qcfg is not None:
         p["in_stream"] = dof.init_stream(d)       # shared: router+all experts
         p["act_stream"] = dof.init_stream(ff)     # shared across experts

@@ -28,14 +28,15 @@ def init_ssm(key: jax.Array, cfg: ModelConfig, qcfg: QuantConfig | None) -> Para
     p: Params = {
         # in_proj → [z(di), x(di), B(g*ds), C(g*ds), dt(nh)]
         "in_proj": dof.init_qlinear(
-            ks[0], d, 2 * di + 2 * s.n_groups * s.d_state + nh, qcfg),
+            ks[0], d, 2 * di + 2 * s.n_groups * s.d_state + nh, qcfg,
+            name="in_proj"),
         "conv_w": jax.random.normal(ks[1], (s.d_conv, conv_dim), jnp.float32) * 0.2,
         "conv_b": jnp.zeros((conv_dim,), jnp.float32),
         "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
         "D": jnp.ones((nh,), jnp.float32),
         "dt_bias": jnp.zeros((nh,), jnp.float32),
         "norm_g": jnp.ones((di,), jnp.float32),
-        "out_proj": dof.init_qlinear(ks[3], di, d, qcfg),
+        "out_proj": dof.init_qlinear(ks[3], di, d, qcfg, name="out_proj"),
     }
     if qcfg is not None:
         p["in_stream"] = dof.init_stream(d)

@@ -139,7 +139,7 @@ def init_model(key: jax.Array, cfg: ModelConfig,
         params["embed"] = init_embed(keys[0], V, d, qcfg)
     if not cfg.tie_embeddings:
         params["lm_head"] = dof.init_qlinear(
-            keys[1], d, V, qcfg,
+            keys[1], d, V, qcfg, name="lm_head",
             w_bits=None if qcfg is None else qcfg.embed_bits)
     if qcfg is not None:
         params["head_stream"] = dof.init_stream(d)
@@ -164,7 +164,8 @@ def init_model(key: jax.Array, cfg: ModelConfig,
                                                  _dense_view(cfg), qcfg)
     elif fam == "encdec":
         params["embed"] = init_embed(keys[0], V, d, qcfg)   # decoder tokens
-        params["frame_proj"] = dof.init_qlinear(keys[5], d, d, qcfg)
+        params["frame_proj"] = dof.init_qlinear(keys[5], d, d, qcfg,
+                                                name="frame_proj")
         params["enc_layers"] = stack(_init_enc_layer, cfg.enc_layers, keys[2])
         params["dec_layers"] = stack(_init_dec_layer, cfg.n_layers, keys[3])
         params["enc_final_norm"] = init_rmsnorm(d)

@@ -149,6 +149,7 @@ class TransformerAdapter:
     def evaluate(self, student: Params, teacher: Params, artifact: Params,
                  plan: DeployPlan) -> dict:
         metrics = self.degradation(student, teacher)
+        metrics["w_layout"] = str(self.qcfg.layout)
         dv = deploy_view(artifact, plan, dtype=jnp.float32)
         ev = effective_view(student, plan, dtype=jnp.float32)
         metrics["export_parity_max_err"] = tree_parity_error(dv, ev)
@@ -376,6 +377,9 @@ class CNNAdapter:
         dv = cnn_lib.cnn_deploy_view(artifact, plan)
         ev = cnn_lib.cnn_effective_view(student, plan)
         metrics = {
+            # convs keep the paper's lw/chw scale shapes; the group layout
+            # applies to the fc qlinear only (QLayout falls back per layer)
+            "w_layout": str(self.qcfg.layout),
             "acc_teacher": self.accuracy(teacher, None),
             "acc_student": self.accuracy(student, self.qcfg),
             "acc_deployed": self.accuracy(dv, None),

@@ -32,6 +32,9 @@ def build_parser() -> argparse.ArgumentParser:
                    help="paper setup: w4a8 (deployment) | w4chw (permissive)")
     q.add_argument("--w-bits", type=int, default=None,
                    help="override the mode's weight bits")
+    q.add_argument("--w-layout", default=None, metavar="LAYOUT",
+                   help="weight-scale layout: layerwise | channel | "
+                        "group:<size> (e.g. group:128)")
     q.add_argument("--steps", type=int, default=60,
                    help="QFT finetune steps (0 = heuristic PTQ only)")
     q.add_argument("--full", action="store_true",
@@ -60,6 +63,7 @@ def build_parser() -> argparse.ArgumentParser:
 def _pcfg_from_args(args: argparse.Namespace) -> PipelineConfig:
     return PipelineConfig(
         arch=args.config, mode=args.mode, w_bits=args.w_bits,
+        w_layout=args.w_layout,
         smoke=not args.full, steps=args.steps, seed=args.seed, cle=args.cle,
         base_lr=args.base_lr, teacher_steps=args.teacher_steps,
         calib_samples=args.calib_samples, calib_seq_len=args.calib_seq_len,
@@ -72,11 +76,12 @@ def _pcfg_from_args(args: argparse.Namespace) -> PipelineConfig:
 def cmd_quantize(args: argparse.Namespace) -> int:
     try:
         pcfg = _pcfg_from_args(args)
-    except KeyError as e:
+    except (KeyError, ValueError) as e:
         print(f"error: {e.args[0]}", file=sys.stderr)
         return 2
+    qcfg = pcfg.quant_config()
     print(f"pipeline: {pcfg.arch} mode={pcfg.mode} "
-          f"w{pcfg.quant_config().w_bits} steps={pcfg.steps} "
+          f"w{qcfg.w_bits} layout={qcfg.layout} steps={pcfg.steps} "
           f"stages={' -> '.join(pcfg.stages())}")
     result = run_pipeline(pcfg, log=lambda s: print(f"  {s}"))
     if result.stages_skipped:

@@ -10,7 +10,8 @@ from __future__ import annotations
 import dataclasses
 
 from ..configs import registry
-from ..core.qconfig import QuantConfig, deployment_oriented, permissive
+from ..core.qconfig import (QLayout, QuantConfig, deployment_oriented,
+                            permissive)
 
 #: Stage order of the paper's single-step PTQ flow (§4).  ``evaluate`` is the
 #: added repo stage: export-parity + degradation metrics + optional serve smoke.
@@ -38,6 +39,8 @@ class PipelineConfig:
     arch: str = "paper-cnn"
     mode: str = "w4a8"                # w4a8 (deployment-oriented) | w4chw
     w_bits: int | None = None         # override the mode's weight bits
+    w_layout: str | None = None       # weight-scale layout override:
+                                      # layerwise | channel | group:<g>
     smoke: bool = True                # registry SMOKE config (CPU-sized)
     steps: int = 60                   # QFT finetune steps (0 skips training)
     seed: int = 0
@@ -64,6 +67,8 @@ class PipelineConfig:
         object.__setattr__(self, "arch", canonical_arch(self.arch))
         if self.mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
+        if self.w_layout is not None:
+            QLayout.parse(self.w_layout)      # fail fast on bad CLI specs
         if self.stop_after is not None and self.stop_after not in STAGES:
             raise ValueError(f"stop_after must be one of {STAGES}")
 
@@ -75,6 +80,9 @@ class PipelineConfig:
         qcfg = deployment_oriented() if self.mode == "w4a8" else permissive()
         if self.w_bits is not None and self.w_bits != qcfg.w_bits:
             qcfg = dataclasses.replace(qcfg, w_bits=self.w_bits)
+        if self.w_layout is not None:
+            qcfg = dataclasses.replace(qcfg,
+                                       w_layout=QLayout.parse(self.w_layout))
         return qcfg
 
     def stages(self) -> tuple[str, ...]:

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 
 from ..core import dof
 from ..core.fakequant import fake_quant, quantize
-from ..core.qconfig import QuantConfig
+from ..core.qconfig import QLayout, QuantConfig
 
 Params = dict[str, Any]
 
@@ -63,7 +63,13 @@ class DeployPlan:
     packed: bool = True               # int4 nibble-packing for non-exempt linears
     exempt: frozenset = frozenset(EXEMPT_8B)
     use_pallas: bool = False          # route matmuls through kernels/quant_matmul
-    interpret: bool = True            # Pallas interpret mode (CPU)
+    interpret: bool | None = None     # Pallas interpret mode; None → auto
+                                      # (interpret everywhere except real TPU)
+    layout: QLayout | None = None     # default weight-scale layout the export
+                                      # ran under (None → qcfg.layout); the
+                                      # per-layer truth is each s_wr's shape
+                                      # (dof.swr_layout_kind), overrides in
+                                      # qcfg.layout_overrides
 
     def bits_for(self, name: str) -> int:
         return self.qcfg.exempt_bits if name in self.exempt else self.qcfg.w_bits
@@ -73,11 +79,11 @@ class DeployPlan:
 
 
 def make_deploy_plan(qcfg: QuantConfig, arch: str = "", family: str = "dense",
-                     use_pallas: bool = False, interpret: bool = True
+                     use_pallas: bool = False, interpret: bool | None = None
                      ) -> DeployPlan:
     return DeployPlan(qcfg=qcfg, arch=arch, family=family,
                       packed=qcfg.w_bits == 4, use_pallas=use_pallas,
-                      interpret=interpret)
+                      interpret=interpret, layout=qcfg.layout)
 
 
 def _as_plan(plan_or_qcfg) -> DeployPlan:
@@ -221,7 +227,9 @@ def kernel_route_check(exported: Params, plan: DeployPlan) -> dict | None:
         # packed + evenly-tiling shapes — what actually runs the kernel
         if ex["q"].dtype != jnp.uint8:
             return False
-        return pallas_tiles_ok(M, ex["q"].shape[-1], ex["q"].shape[-2] * 2)
+        n_groups = ex["s_wr"].shape[0] if ex["s_wr"].ndim == 2 else None
+        return pallas_tiles_ok(M, ex["q"].shape[-1], ex["q"].shape[-2] * 2,
+                               n_groups=n_groups)
 
     # prefer a linear that genuinely reaches the Pallas kernel
     chosen = None
@@ -241,6 +249,8 @@ def kernel_route_check(exported: Params, plan: DeployPlan) -> dict | None:
     if "b" in ex:
         y_ref = y_ref + ex["b"]
     return {"path": ".".join(str(p) for p in path),
+            "layout": str(plan.layout if plan.layout is not None
+                          else plan.qcfg.layout),
             "pallas": bool(plan.use_pallas and reaches_kernel(ex)),
             "max_err": float(jnp.max(jnp.abs(y - y_ref)))}
 

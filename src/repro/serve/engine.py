@@ -43,7 +43,7 @@ class Engine:
     """
 
     def __init__(self, cfg: ModelConfig, qcfg: QuantConfig, student_params,
-                 scfg: ServeConfig = ServeConfig(),
+                 scfg: ServeConfig | None = None,
                  plan: DeployPlan | None = None):
         plan = plan or make_deploy_plan(qcfg, arch=cfg.name, family=cfg.family)
         exported = jax.jit(lambda p: export_for_layers(p, plan))(student_params)
@@ -51,7 +51,7 @@ class Engine:
 
     @classmethod
     def from_artifact(cls, cfg: ModelConfig, plan: DeployPlan, exported,
-                      scfg: ServeConfig = ServeConfig()) -> "Engine":
+                      scfg: ServeConfig | None = None) -> "Engine":
         """Build the engine from an exported artifact + its deploy plan
         (no re-export; what launch/serve and the pipeline's serve-smoke use)."""
         self = cls.__new__(cls)
@@ -59,9 +59,11 @@ class Engine:
         return self
 
     def _setup(self, cfg: ModelConfig, plan: DeployPlan, exported,
-               scfg: ServeConfig) -> None:
+               scfg: ServeConfig | None) -> None:
         self.cfg = cfg
-        self.scfg = scfg
+        # fresh per-engine config: a dataclass default instance would be
+        # shared (and mutable) across every Engine in the process
+        self.scfg = scfg if scfg is not None else ServeConfig()
         self.plan = plan
         self.qcfg = plan.qcfg
         self.params = jax.jit(lambda e: deploy_view(e, plan))(exported)
@@ -94,17 +96,27 @@ class Engine:
         cache = init_cache(self.cfg, scfg.slots, scfg.max_len)
         logits, cache = self._prefill(self.params, cache, toks)
         outs: list[list[int]] = [[] for _ in range(scfg.slots)]
-        done = [False] * scfg.slots
         max_new = max(r.max_new_tokens for r in requests)
+        # per-slot stop bookkeeping stays on device (one transfer per step,
+        # not one blocking int(cur[i]) sync per slot per step); padding slots
+        # start done so they never emit
+        eos = jnp.asarray([r.eos_id for r in requests]
+                          + [-1] * (scfg.slots - n), jnp.int32)
+        budget = jnp.asarray([r.max_new_tokens for r in requests]
+                             + [0] * (scfg.slots - n), jnp.int32)
+        done = jnp.arange(scfg.slots) >= n              # [slots] bool
+        counts = jnp.zeros((scfg.slots,), jnp.int32)
         cur = jnp.argmax(logits, -1)                    # [slots]
         for step in range(max_new):
-            for i, r in enumerate(requests):
-                t = int(cur[i])
-                if not done[i]:
-                    outs[i].append(t)
-                    if t == r.eos_id or len(outs[i]) >= r.max_new_tokens:
-                        done[i] = True
-            if all(done[: n]):
+            emit = ~done
+            counts = counts + emit
+            done = done | (emit & (cur == eos)) | (counts >= budget)
+            toks_h, emit_h, all_done = jax.device_get(
+                (cur, emit, jnp.all(done)))             # the step's one sync
+            for i in range(n):
+                if emit_h[i]:
+                    outs[i].append(int(toks_h[i]))
+            if all_done:
                 break
             logits, cache = self._decode(self.params, cache, cur[:, None])
             cur = jnp.argmax(logits, -1)

@@ -17,13 +17,20 @@ from repro.kernels import ref
     (128, 512, 64, 128, 64, 256),
 ])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_quant_matmul_sweep(M, K, N, bm, bn, bk, dtype):
+@pytest.mark.parametrize("layout", ["channel", "group"])
+def test_quant_matmul_sweep(M, K, N, bm, bn, bk, dtype, layout):
+    """Kernel vs XLA oracle under both scale layouts (rank-1 and group)."""
     key = jax.random.PRNGKey(M + K + N)
     x = jax.random.normal(key, (M, K), dtype)
     q4 = jax.random.randint(key, (K, N), -7, 8).astype(jnp.int8)
     qw = pack_int4(q4, axis=0)
     swl = (jnp.exp(jax.random.normal(key, (K,)) * 0.2) * 0.05).astype(jnp.float32)
-    swr = jnp.exp(jax.random.normal(key, (N,)) * 0.2).astype(jnp.float32)
+    if layout == "group":
+        g = min(bk, 64)                  # whole groups per K-tile (bk % g == 0)
+        swr = jnp.exp(jax.random.normal(key, (K // g, N)) * 0.2
+                      ).astype(jnp.float32)
+    else:
+        swr = jnp.exp(jax.random.normal(key, (N,)) * 0.2).astype(jnp.float32)
     y = quant_matmul(x, qw, swl, swr, bm=bm, bn=bn, bk=bk, interpret=True)
     yr = ref.quant_matmul_ref(x, qw, swl, swr)
     tol = 2e-5 if dtype == jnp.float32 else 2e-2

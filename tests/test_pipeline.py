@@ -97,6 +97,29 @@ def test_pipeline_e2e_tiny_transformer():
                                rtol=1e-4, atol=1e-5)
 
 
+def test_pipeline_group_layout_transformer():
+    """W4 group-wise weight scales end to end on a transformer (QLayout):
+    multiple groups per linear at smoke dims (d=64, g=16 → 4 groups), export
+    parity exact and the kernel-route oracle through the Pallas path."""
+    pcfg = PipelineConfig(mode="w4a8", w_layout="group:16", use_pallas=True,
+                          **{**TINY_LM, "steps": 0})
+    result = run_pipeline(pcfg)
+    ev = result.metrics["evaluate"]
+    assert ev["w_layout"] == "group:16"
+    assert ev["export_parity_max_err"] < 1e-4, ev
+    kr = ev["kernel_route"]
+    assert kr["pallas"] and kr["max_err"] < 1e-4, kr
+    # the artifact really carries group-resolution scales: [K/g, out]
+    up = result.artifact["layers"]["mlp"]["up"]
+    assert up["s_wr"].ndim == 3 and up["s_wr"].shape[-2] == 64 // 16
+    lin = result.student["layers"]["mlp"]["up"]
+    log_sa = result.student["layers"]["mlp"]["in_stream"]["log_sa"]
+    deq = dof.dequantize_export(up, jnp.float32)
+    w_eff = dof.effective_weight(lin, result.qcfg, log_sa,
+                                 compute_dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(deq), np.asarray(w_eff))
+
+
 def test_pipeline_w4chw_mode_cnn():
     """Permissive (doubly-channelwise / APQ) setup through export+evaluate,
     no training.  (The transformer dchw path is covered in the slow tier by

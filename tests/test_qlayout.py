@@ -1,0 +1,250 @@
+"""QLayout: group-wise scales as a first-class granularity axis.
+
+Round-trip law under every layout (the refactor's acceptance property):
+
+    dequantize_export(export_qlinear(p))  ==  effective_weight(p)   (f32, exact)
+
+for layerwise / channel / group{32,64,128}, packed-int4 and int8, plain and
+expert-stacked — plus kernel parity: quant_matmul under group scales matches
+the XLA dequant reference.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (QLayout, dequantize_export, effective_weight,
+                        export_qlinear, init_qlinear, mmse_init_qlinear,
+                        apq_init_qlinear, permissive, swr_layout_kind)
+from repro.core.fakequant import expand_group_scale, pack_int4
+from repro.kernels import quant_matmul
+from repro.kernels.ops import pallas_tiles_ok, qlinear_deployed
+from repro.serve.deploy import make_deploy_plan
+
+LAYOUTS = ("layerwise", "channel", "group:32", "group:64", "group:128")
+
+
+# ---------------------------------------------------------------------------
+# Descriptor
+# ---------------------------------------------------------------------------
+
+def test_qlayout_parse_and_shapes():
+    assert QLayout.parse("group:128") == QLayout("group", 128)
+    assert QLayout.parse("channel") == QLayout("channel")
+    assert str(QLayout("group", 64)) == "group:64"
+    assert QLayout("layerwise").swr_shape(256, 32) == ()
+    assert QLayout("channel").swr_shape(256, 32, expert_dim=4) == (4, 32)
+    assert QLayout("group", 64).swr_shape(256, 32) == (4, 32)
+    assert QLayout("group", 64).swr_shape(256, 32, expert_dim=4) == (4, 4, 32)
+    # non-dividing in-dim falls back to a single group (channel granularity,
+    # group shape)
+    assert QLayout("group", 128).swr_shape(96, 8) == (1, 8)
+    with pytest.raises(ValueError):
+        QLayout.parse("group:x")
+    with pytest.raises(ValueError):
+        QLayout.parse("grouped:64")           # typos must not parse
+    with pytest.raises(ValueError):
+        QLayout.parse("channel:8")            # only group takes a size
+    with pytest.raises(ValueError):
+        QLayout("blockwise")
+
+
+def test_layout_inferred_from_swr_shape():
+    key = jax.random.PRNGKey(0)
+    for spec, kind in [("layerwise", "layerwise"), ("channel", "channel"),
+                       ("group:64", "group")]:
+        cfg = permissive(w_layout=QLayout.parse(spec))
+        p = init_qlinear(key, 256, 32, cfg)
+        assert swr_layout_kind(p["w"], p["log_swr"]) == kind
+        pe = init_qlinear(key, 256, 32, cfg, expert_dim=3)
+        assert swr_layout_kind(pe["w"], pe["log_swr"]) == kind
+
+
+def test_per_layer_layout_override():
+    cfg = permissive(w_layout=QLayout("group", 64),
+                     layout_overrides=(("lm_head", "channel"),))
+    key = jax.random.PRNGKey(1)
+    assert init_qlinear(key, 256, 32, cfg, name="up")["log_swr"].shape == (4, 32)
+    assert init_qlinear(key, 256, 32, cfg,
+                        name="lm_head")["log_swr"].shape == (32,)
+
+
+# ---------------------------------------------------------------------------
+# Round-trip: export ∘ dequantize ≡ effective_weight, bit-exact in f32
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", LAYOUTS)
+@pytest.mark.parametrize("expert_dim", [None, 3])
+def test_export_roundtrip_bit_exact(spec, expert_dim):
+    cfg = permissive(w_layout=QLayout.parse(spec))
+    key = jax.random.PRNGKey(0)
+    p = init_qlinear(key, 256, 32, cfg, expert_dim=expert_dim)
+    p = mmse_init_qlinear(p, cfg)
+    log_sa = jax.random.normal(jax.random.PRNGKey(1), (256,)) * 0.2
+    ex = export_qlinear(p, cfg, log_sa_in=log_sa)
+    assert ex["q"].dtype == jnp.uint8                 # int4 nibble-packed
+    w_eff = effective_weight(p, cfg, log_sa, compute_dtype=jnp.float32)
+    deq = dequantize_export(ex, jnp.float32)
+    np.testing.assert_array_equal(np.asarray(deq), np.asarray(w_eff))
+
+
+@pytest.mark.parametrize("spec", ["channel", "group:64"])
+def test_export_roundtrip_int8_unpacked(spec):
+    """Exempt (8-bit) layers keep their layout; int8 exports stay unpacked."""
+    cfg = permissive(w_layout=QLayout.parse(spec))
+    key = jax.random.PRNGKey(2)
+    p = mmse_init_qlinear(init_qlinear(key, 128, 16, cfg), cfg, bits=8)
+    ex = export_qlinear(p, cfg, bits=8)
+    assert ex["q"].dtype == jnp.int8
+    w_eff = effective_weight(p, cfg, None, compute_dtype=jnp.float32, bits=8)
+    deq = dequantize_export(ex, jnp.float32, packed=False)
+    np.testing.assert_array_equal(np.asarray(deq), np.asarray(w_eff))
+
+
+def test_group_apq_roundtrip():
+    """dchw init (APQ left scale + group-refit right scale) round-trips too."""
+    cfg = permissive(w_layout=QLayout("group", 32))
+    key = jax.random.PRNGKey(3)
+    p = init_qlinear(key, 128, 16, cfg)
+    p, log_swl = apq_init_qlinear(p, cfg)
+    assert p["log_swr"].shape == (4, 16)
+    ex = export_qlinear(p, cfg, log_sa_in=-log_swl)
+    w_eff = effective_weight(p, cfg, -log_swl, compute_dtype=jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(dequantize_export(ex, jnp.float32)), np.asarray(w_eff))
+
+
+@pytest.mark.parametrize("spec,shape", [("layerwise", ()), ("channel", (16,)),
+                                        ("group:32", (4, 16))])
+def test_apq_preserves_requested_layout(spec, shape):
+    """apq_init_qlinear must not silently change log_swr's layout (a
+    layerwise request used to come back per-channel)."""
+    cfg = permissive(w_layout=QLayout.parse(spec))
+    p = init_qlinear(jax.random.PRNGKey(8), 128, 16, cfg)
+    p, _ = apq_init_qlinear(p, cfg)
+    assert p["log_swr"].shape == shape
+
+
+def test_group_mmse_beats_channel_on_blocky_rows():
+    """Finer granularity can only lower the MMSE fit error (Eq. 5 ordering)."""
+    key = jax.random.PRNGKey(4)
+    w = jax.random.normal(key, (128, 16))
+    # heterogeneous in-blocks so the group axis matters
+    block_gain = jnp.exp(jax.random.normal(jax.random.PRNGKey(5), (4, 1)))
+    w = w * jnp.repeat(block_gain, 32, axis=0)
+    cfg_ch = permissive(w_layout=QLayout("channel"))
+    cfg_g = permissive(w_layout=QLayout("group", 32))
+    p = {"w": w, "log_swr": jnp.zeros((16,))}
+    p_ch = mmse_init_qlinear(p, cfg_ch)
+    pg = {"w": w, "log_swr": jnp.zeros((4, 16))}
+    p_g = mmse_init_qlinear(pg, cfg_g)
+    e_ch = float(jnp.linalg.norm(
+        w - effective_weight(p_ch, cfg_ch, None, jnp.float32)))
+    e_g = float(jnp.linalg.norm(
+        w - effective_weight(p_g, cfg_g, None, jnp.float32)))
+    assert e_g <= e_ch * 1.001, (e_ch, e_g)
+
+
+def test_mmse_grp_on_granularity_ladder():
+    """lw ≥ grp (group refines the layerwise grid); non-dividing group sizes
+    fall back to a single group ≡ channel granularity."""
+    from repro.core import mmse_ch, mmse_grp, mmse_lw
+    key = jax.random.PRNGKey(6)
+    w = jax.random.normal(key, (128, 16)) * jnp.repeat(
+        jnp.exp(jax.random.normal(jax.random.PRNGKey(7), (8, 1))), 16, axis=0)
+    e_lw, e_grp = float(mmse_lw(w, 4)), float(mmse_grp(w, 4, 16))
+    assert e_grp <= e_lw * 1.001, (e_lw, e_grp)
+    np.testing.assert_allclose(float(mmse_grp(w, 4, 100)),
+                               float(mmse_ch(w, 4)), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Kernel parity under group scales
+# ---------------------------------------------------------------------------
+
+def test_quant_matmul_group_vs_dense_dequant():
+    """Kernel ≡ x @ (S_wL ⊙ Ŵ ⊙ expand(S_wG)) built densely (f32 matmul)."""
+    key = jax.random.PRNGKey(9)
+    M, K, N, g = 32, 256, 64, 64
+    x = jax.random.normal(key, (M, K), jnp.float32)
+    q4 = jax.random.randint(key, (K, N), -7, 8).astype(jnp.int8)
+    s_wl = jnp.exp(jax.random.normal(key, (K,)) * 0.1)
+    s_wg = jnp.exp(jax.random.normal(key, (K // g, N)) * 0.3)
+    w = (q4.astype(jnp.float32) * s_wl[:, None]
+         * expand_group_scale(s_wg, K, axis=0))
+    y = quant_matmul(x, pack_int4(q4, axis=0), s_wl, s_wg, interpret=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_pallas_tiles_ok_group_constraint():
+    # bk=256 holds whole groups of 128 → ok
+    assert pallas_tiles_ok(128, 128, 512, n_groups=4)
+    # g=512 > bk=256 → a K-tile would split a group → reference path
+    assert not pallas_tiles_ok(128, 128, 512, n_groups=1)
+    # non-dividing group count never reaches the kernel
+    assert not pallas_tiles_ok(128, 128, 512, n_groups=3)
+    assert pallas_tiles_ok(128, 128, 512)         # rank-1 unchanged
+
+
+@pytest.mark.parametrize("spec", ["layerwise", "channel", "group:64"])
+def test_qlinear_deployed_layouts_match_effective(spec):
+    """End-to-end deployed path (plan-routed) ≡ training-time weights."""
+    cfg = permissive(w_layout=QLayout.parse(spec))
+    key = jax.random.PRNGKey(0)
+    p = mmse_init_qlinear(init_qlinear(key, 256, 128, cfg), cfg)
+    x = jax.random.normal(key, (8, 256), jnp.float32)
+    log_sa = jax.random.normal(jax.random.PRNGKey(1), (256,)) * 0.1
+    ex = export_qlinear(p, cfg, log_sa_in=log_sa)
+    plan = make_deploy_plan(cfg, use_pallas=True, interpret=True)
+    y = qlinear_deployed(x, ex, plan=plan)
+    w_eff = effective_weight(p, cfg, log_sa, compute_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w_eff),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Property tests (hypothesis optional — only this section skips without it;
+# the parametrized round-trip/kernel tests above always run)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAS_HYPOTHESIS = False
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(st.sampled_from([16, 32, 64]), st.sampled_from([64, 128, 256]),
+           st.integers(0, 2 ** 31 - 1), st.booleans())
+    def test_roundtrip_property_group(g, K, seed, tie_stream):
+        """∀ W, group, stream tie: decode(export(p)) == effective_weight(p)."""
+        cfg = permissive(w_layout=QLayout("group", g))
+        key = jax.random.PRNGKey(seed)
+        p = mmse_init_qlinear(init_qlinear(key, K, 16, cfg), cfg)
+        log_sa = (jax.random.normal(key, (K,)) * 0.3) if tie_stream else None
+        ex = export_qlinear(p, cfg, log_sa_in=log_sa)
+        w_eff = effective_weight(p, cfg, log_sa, compute_dtype=jnp.float32)
+        deq = dequantize_export(ex, jnp.float32)
+        np.testing.assert_array_equal(np.asarray(deq), np.asarray(w_eff))
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.sampled_from(["layerwise", "channel", "group:32"]),
+           st.integers(0, 2 ** 31 - 1))
+    def test_expand_group_scale_blocks_property(spec, seed):
+        """Expanded scales are block-constant and cover the whole in-dim."""
+        layout = QLayout.parse(spec)
+        cfg = permissive(w_layout=layout)
+        key = jax.random.PRNGKey(seed)
+        p = mmse_init_qlinear(init_qlinear(key, 64, 8, cfg), cfg)
+        from repro.core.dof import weight_scale
+        s = weight_scale(p, None)
+        s = jnp.broadcast_to(s, (64, 8))
+        if layout.kind == "group":
+            blocks = s.reshape(layout.n_groups(64), -1, 8)
+            assert bool(jnp.all(blocks == blocks[:, :1, :]))
+        elif layout.kind == "channel":
+            assert bool(jnp.all(s == s[:1, :]))
+        else:
+            assert bool(jnp.all(s == s[0, 0]))
