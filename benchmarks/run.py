@@ -60,6 +60,42 @@ def _quant_matmul_layout_bench() -> list[dict]:
     return rows
 
 
+def _deploy_export_bench() -> list[dict]:
+    """export_for_layers → deploy_view micro-bench (jitted, CPU wall time).
+
+    Starts the deploy-path perf trajectory: µs/call and MB/s of artifact
+    produced for a smoke-size dense LM under the resolved QuantPlan, plus
+    the deploy_view (dequantize-in-graph) side.  Rows land in
+    benchmarks/results/BENCH_deploy.json.
+    """
+    from repro.core import deployment_oriented
+    from repro.models import ModelConfig, init_model
+    from repro.serve.deploy import (deploy_view, export_for_layers,
+                                    make_deploy_plan)
+    from .common import RESULTS, timed
+    cfg = ModelConfig(name="bench", family="dense", n_layers=4, d_model=128,
+                      n_heads=4, n_kv_heads=2, d_ff=256, vocab=512,
+                      head_dim=32, scan_layers=False, remat=False)
+    qcfg = deployment_oriented()
+    student = init_model(jax.random.PRNGKey(0), cfg, qcfg)
+    plan = make_deploy_plan(qcfg, arch="bench", params=student, model_cfg=cfg)
+    artifact = jax.jit(lambda p: export_for_layers(p, plan))(student)
+    art_bytes = sum(leaf.size * leaf.dtype.itemsize
+                    for leaf in jax.tree.leaves(artifact))
+    rows = []
+    t_ex = timed(jax.jit(lambda p: export_for_layers(p, plan)), student)
+    rows.append({"name": "deploy.export_for_layers", "us_per_call": t_ex,
+                 "derived": f"{art_bytes / t_ex:.1f}MB/s",
+                 "artifact_bytes": art_bytes,
+                 "n_tensors": len(plan.quant_plan)})
+    t_dv = timed(jax.jit(lambda e: deploy_view(e, plan)), artifact)
+    rows.append({"name": "deploy.deploy_view", "us_per_call": t_dv,
+                 "derived": f"{art_bytes / t_dv:.1f}MB/s"})
+    out = RESULTS / "BENCH_deploy.json"
+    out.write_text(json.dumps(rows, indent=1, default=str))
+    return rows
+
+
 def _kernel_timings() -> list[dict]:
     """µs/call for the three Pallas kernels (interpret) vs jnp oracles."""
     from repro.core.fakequant import pack_int4
@@ -100,6 +136,7 @@ def main() -> None:
         ("fig9_dch_training", F.fig9_dch_training),
         ("kernel_timings", _kernel_timings),
         ("quant_matmul_layouts", _quant_matmul_layout_bench),
+        ("deploy_export", _deploy_export_bench),
     ]
     print("name,us_per_call,derived")
     for name, fn in benches:

@@ -13,3 +13,5 @@ from .dof import (init_stream, init_qlinear, qlinear, effective_weight,
 from .cle import cle_factors, apply_cle_to_stream
 from .distill import backbone_l2, logits_ce, qft_loss
 from .policy import select_exempt_layers, bits_for_layer
+from .plan import (QuantPlan, TensorSpec, resolve_plan, apply_plan,
+                   make_sensitivity_producer)

@@ -91,12 +91,15 @@ def init_qlinear(key: jax.Array, d_in: int, d_out: int, cfg: QuantConfig | None,
                  bias: bool = False, w_init_scale: float | None = None,
                  expert_dim: int | None = None, w_bits: int | None = None,
                  name: str | None = None,
-                 layout: QLayout | None = None) -> Params:
+                 layout: QLayout | None = None, spec=None) -> Params:
     """Create master weights + scale DoF.  ``expert_dim`` stacks E experts.
 
-    ``w_bits`` overrides cfg.w_bits for exempted (8-bit) layers.
-    ``name`` keys the per-linear layout override in cfg.layout_overrides;
-    ``layout`` overrides both.  The chosen layout determines the ``log_swr``
+    ``spec`` (a core.plan.TensorSpec — one resolved QuantPlan row) supplies
+    both bits and layout and wins over everything; else ``w_bits`` overrides
+    cfg.w_bits for exempted (8-bit) layers, ``name`` keys the bare-name
+    layout override in cfg.layout_overrides, and ``layout`` overrides both.
+    (Path-glob overrides that init can't see are reconciled post-resolution
+    by core.plan.apply_plan.)  The chosen layout determines the ``log_swr``
     shape — the single source of truth every later stage infers it from.
     """
     shape = (d_in, d_out) if expert_dim is None else (expert_dim, d_in, d_out)
@@ -106,6 +109,8 @@ def init_qlinear(key: jax.Array, d_in: int, d_out: int, cfg: QuantConfig | None,
         bshape = (d_out,) if expert_dim is None else (expert_dim, d_out)
         p["b"] = jnp.zeros(bshape, dtype=jnp.float32)
     if cfg is not None:
+        if spec is not None:
+            w_bits, layout = spec.w_bits, QLayout.parse(spec.layout)
         bits = w_bits or cfg.w_bits   # NOT stored in params (kept static in
         # the quant plan and passed at apply time) so layer pytrees stay
         # pure-array and vmap/scan-stackable.

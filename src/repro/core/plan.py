@@ -1,0 +1,518 @@
+"""QuantPlan: every per-tensor quantization decision, resolved once.
+
+The paper's thesis is a *unified* treatment of all quantization DoF; the
+repo-level analogue is that the per-tensor *decisions* — bits, scale layout,
+stream tie, int4 packing — must live in one value instead of being re-derived
+by each consumer (init, MMSE fit, export, deploy view, serving engine).
+
+``resolve_plan(qcfg, params)`` walks a quantized params tree (real arrays or
+``jax.eval_shape`` structs — only shapes are read) and maps every quantized
+tensor's **path-qualified name** (``layers.mlp.down``, ``convs.0``, ``fc``;
+vmap-stacked subtrees are one tensor, so stacked paths carry no layer index)
+to a frozen :class:`TensorSpec`.  Resolution is a pipeline of *producers*,
+each a pure ``specs, ctx -> specs`` function, applied in order:
+
+1. **default ladder** — role-based defaults: backbone linears/convs at
+   ``qcfg.w_bits``; ``lm_head`` at ``embed_bits``; ``fc`` (classifier head)
+   at ``exempt_bits``; MoE routers at ``model_cfg.moe.router_bits``;
+   embeddings at ``embed_bits``.  Linear layouts come from ``qcfg.layout``
+   with the group-∤-d_in single-group fallback resolved (and recorded) here.
+2. **§4 1 %-rule** (``core.policy.select_exempt_layers``) — the paper's flat
+   overhead rule: smallest backbone tensors, accumulated by size until their
+   weight-memory reaches ``exempt_frac`` of the backbone total, are kept at
+   ``exempt_bits``.
+3. **overrides** — ``qcfg.layout_overrides`` / ``qcfg.bits_overrides``,
+   keyed by a path-glob grammar (fnmatch over the dotted path; a pattern
+   with no ``.`` also matches the bare tensor name, which keeps the old
+   bare-name override tuples working).
+4. **caller producers** — the pluggable hook for sensitivity-aware bit
+   allocation (Sensitivity-Aware PTQ, 2509.05576) or Hessian-guided
+   orderings (EPTQ, 2309.11531): pass ``producers=(fn, ...)``.
+
+The resolved plan round-trips as JSON (``to_json``/``from_json``) and rides
+inside exported artifacts as a uint8 leaf (``serve.deploy`` embeds it;
+``Engine.from_artifact`` reconstructs it), so a served artifact carries its
+own decisions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import json
+import warnings
+from typing import Any, Callable
+
+import numpy as np
+
+from .policy import select_exempt_layers
+from .qconfig import QLayout, QuantConfig
+
+Params = dict[str, Any]
+
+PLAN_KEY = "quant_plan"             # artifact leaf holding the JSON plan
+
+# linear-name → stream-name that supplies S_wL (Eq. 2 tying; fan-out shares).
+# Lives here (not serve/deploy) so plan resolution and the trainer share one
+# table without a core → serve import cycle.
+STREAM_OF = {
+    "wq": "in_stream", "wk": "in_stream", "wv": "in_stream",
+    "wo": "out_stream",
+    "up": "in_stream", "gate": "in_stream", "down": "act_stream",
+    "router": "in_stream",
+    "shared_up": "in_stream", "shared_gate": "in_stream",
+    "shared_down": "shared_act_stream",
+    "q_down": "in_stream", "kv_down": "in_stream",
+    "q_up": "q_stream", "k_up": "kv_stream", "v_up": "kv_stream",
+    "in_proj": "in_stream", "out_proj": "out_stream",
+    "lm_head": "head_stream", "fc": "fc_stream",
+    "frame_proj": None,
+}
+STREAM_KEYS = {"in_stream", "out_stream", "act_stream", "shared_act_stream",
+               "q_stream", "kv_stream", "head_stream", "fc_stream"}
+
+
+def _is_qlinear(node) -> bool:
+    return isinstance(node, dict) and "w" in node and "log_swr" in node
+
+
+def _is_qconv(node) -> bool:
+    return isinstance(node, dict) and "w" in node and "log_f" in node
+
+
+def _is_qembed(node) -> bool:
+    return isinstance(node, dict) and "w" in node and "log_s" in node
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorSpec:
+    """One tensor's resolved quantization decisions (immutable plan row).
+
+    ``layout`` is the *effectively resolved* layout string (after the
+    group-∤-d_in single-group fallback), not the requested one;
+    ``layout_fallback`` records that the fallback fired.  ``origin`` names
+    the producer that last set the bits — the audit trail `repro plan`
+    prints.
+    """
+    w_bits: int
+    layout: str                        # effective QLayout str ("group:32", …)
+    stream: str | None                 # S_wL-supplying stream name (Eq. 2)
+    packed: bool                       # int4 nibble-packed in the artifact
+    role: str                          # linear | conv | head | router | embed
+    shape: tuple[int, ...] = ()        # full param shape (incl. stacked axes)
+    exempt: bool = False               # selected by the §4 1%-rule
+    origin: str = "default"            # producer that decided the bits
+    layout_fallback: bool = False
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 0
+
+
+#: producer signature: (specs, ctx) -> specs (pure; return a new dict)
+Producer = Callable[[dict[str, TensorSpec], "PlanContext"],
+                    dict[str, TensorSpec]]
+
+
+@dataclasses.dataclass
+class PlanContext:
+    """Read-only inputs shared by all producers during one resolution."""
+    qcfg: QuantConfig
+    model_cfg: Any = None
+    fallbacks: list = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPlan:
+    """path-qualified tensor name → TensorSpec, resolved once per run.
+
+    The single API between config, init, finetune, export and serving:
+    consumers look decisions up here instead of re-deriving them from
+    ``(qcfg, name, dtype)`` forks.  Hashable (entries are a tuple) so it can
+    ride inside the frozen :class:`serve.deploy.DeployPlan`.
+    """
+    entries: tuple = ()                # ((path, TensorSpec), ...)
+    default_bits: int = 4              # fallback for paths outside the plan
+    default_layout: str = "channel"
+
+    def __post_init__(self):
+        object.__setattr__(self, "_index", dict(self.entries))
+
+    # ------------------------------------------------------------- lookups
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def __iter__(self):
+        return iter(self.entries)
+
+    def __contains__(self, path: str) -> bool:
+        return path in self._index
+
+    @property
+    def paths(self) -> tuple[str, ...]:
+        return tuple(p for p, _ in self.entries)
+
+    def spec(self, path: str) -> TensorSpec:
+        try:
+            return self._index[path]
+        except KeyError:
+            raise KeyError(f"{path!r} is not in the quant plan; known tensors:"
+                           f" {', '.join(self.paths)}") from None
+
+    def get(self, path: str, default=None):
+        return self._index.get(path, default)
+
+    def bits_for(self, path: str) -> int:
+        spec = self._index.get(path)
+        return self.default_bits if spec is None else spec.w_bits
+
+    def is_packed(self, path: str) -> bool:
+        spec = self._index.get(path)
+        return False if spec is None else spec.packed
+
+    def layout_for(self, path: str) -> str:
+        spec = self._index.get(path)
+        return self.default_layout if spec is None else spec.layout
+
+    @property
+    def exempt_names(self) -> frozenset:
+        return frozenset(p for p, s in self.entries if s.exempt)
+
+    # ------------------------------------------------------------ serialize
+    def to_json(self, indent: int | None = None) -> str:
+        return json.dumps({
+            "version": 1,
+            "default_bits": self.default_bits,
+            "default_layout": self.default_layout,
+            "specs": [[p, {**dataclasses.asdict(s),
+                           "shape": list(s.shape)}] for p, s in self.entries],
+        }, indent=indent)
+
+    @classmethod
+    def from_json(cls, text: str) -> "QuantPlan":
+        doc = json.loads(text)
+        entries = tuple(
+            (p, TensorSpec(**{**d, "shape": tuple(d.get("shape", ()))}))
+            for p, d in doc["specs"])
+        return cls(entries=entries, default_bits=doc["default_bits"],
+                   default_layout=doc["default_layout"])
+
+    # ------------------------------------------------------------- display
+    def describe(self) -> str:
+        """The resolved table `python -m repro plan` prints."""
+        head = f"{'tensor':<28s} {'shape':<18s} bits layout      " \
+               f"{'stream':<16s} pack role    origin"
+        lines = [head, "-" * len(head)]
+        for p, s in self.entries:
+            layout = s.layout + ("!" if s.layout_fallback else "")
+            lines.append(
+                f"{p:<28s} {str(list(s.shape)):<18s} {s.w_bits:<4d} "
+                f"{layout:<11s} {s.stream or '-':<16s} "
+                f"{'y' if s.packed else '-':<4s} {s.role:<7s} {s.origin}")
+        # same denominator the exemption rule budgets against: the backbone
+        backbone = [s for _, s in self.entries
+                    if s.role in ("linear", "conv", "router")]
+        total = sum(s.size for s in backbone) or 1
+        ex = sum(s.size for s in backbone if s.exempt)
+        lines.append(f"# {len(self.entries)} tensors; exempt (1%-rule) "
+                     f"backbone weight fraction: {ex / total:.4f}"
+                     + ("; '!' = group layout fell back to a single group"
+                        if any(s.layout_fallback for _, s in self.entries)
+                        else ""))
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Path-glob override grammar
+# ---------------------------------------------------------------------------
+
+def glob_match(pattern: str, path: str) -> bool:
+    """fnmatch over the dotted path; a pattern without ``.`` also matches the
+    bare tensor name (backwards compat with the old bare-name tuples)."""
+    if fnmatch.fnmatchcase(path, pattern):
+        return True
+    return "." not in pattern and fnmatch.fnmatchcase(
+        path.rsplit(".", 1)[-1], pattern)
+
+
+# ---------------------------------------------------------------------------
+# Tree walk: every quantized tensor, path-qualified
+# ---------------------------------------------------------------------------
+
+def iter_quantized(tree, prefix: tuple = ()):
+    """Yield (path tuple, kind, node) for every quantized tensor.
+
+    Works on real param trees and ``jax.eval_shape`` structs alike (only
+    ``.shape`` is read downstream).  The tree must be a *student* tree
+    (teacher trees carry no scale DoF, so nothing is quantized there).
+    """
+    if isinstance(tree, dict):
+        if _is_qlinear(tree):
+            yield prefix, "linear", tree
+            return
+        if _is_qembed(tree):
+            yield prefix, "embed", tree
+            return
+        if _is_qconv(tree):
+            yield prefix, "conv", tree
+            return
+        for k, v in tree.items():
+            if k in STREAM_KEYS or k == PLAN_KEY:
+                continue
+            yield from iter_quantized(v, prefix + (k,))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from iter_quantized(v, prefix + (str(i),))
+
+
+def _effective_layout(layout: QLayout, d_in: int) -> tuple[QLayout, bool]:
+    """Resolve the group-∤-d_in single-group fallback (QLayout.n_groups)."""
+    if layout.kind == "group" and d_in % layout.group != 0:
+        return QLayout("group", d_in), True
+    return layout, False
+
+
+def _norm_packed(spec: TensorSpec) -> TensorSpec:
+    """packed is derived state: 4-bit + even packing axis, never embeddings."""
+    packed = (spec.role != "embed" and spec.w_bits == 4
+              and len(spec.shape) >= 2 and spec.shape[-2] % 2 == 0)
+    if packed == spec.packed:
+        return spec
+    return dataclasses.replace(spec, packed=packed)
+
+
+# ---------------------------------------------------------------------------
+# Producers
+# ---------------------------------------------------------------------------
+
+def default_ladder(params) -> Producer:
+    """Role-based defaults — the one place bare names resolve to roles."""
+
+    def produce(specs: dict[str, TensorSpec], ctx: PlanContext):
+        qcfg = ctx.qcfg
+        out = dict(specs)
+        for path, kind, node in iter_quantized(params):
+            dotted = ".".join(path)
+            name = path[-1]
+            shape = tuple(int(d) for d in node["w"].shape)
+            if kind == "embed":
+                out[dotted] = TensorSpec(
+                    w_bits=qcfg.embed_bits, layout="row", stream=None,
+                    packed=False, role="embed", shape=shape)
+                continue
+            if kind == "conv":
+                out[dotted] = TensorSpec(
+                    w_bits=qcfg.w_bits,
+                    layout="channel" if qcfg.swr_per_channel else "layerwise",
+                    stream=None, packed=False, role="conv", shape=shape)
+                continue
+            if name == "lm_head":
+                bits, role = qcfg.embed_bits, "head"
+            elif name == "fc":
+                bits, role = qcfg.exempt_bits, "head"
+            elif name == "router":
+                moe = getattr(ctx.model_cfg, "moe", None)
+                bits = getattr(moe, "router_bits", qcfg.exempt_bits)
+                role = "router"
+            else:
+                bits, role = qcfg.w_bits, "linear"
+            layout, fell = _effective_layout(qcfg.layout, shape[-2])
+            if fell:
+                ctx.fallbacks.append((dotted, str(qcfg.layout), str(layout)))
+            out[dotted] = TensorSpec(
+                w_bits=bits, layout=str(layout), stream=STREAM_OF.get(name),
+                packed=False, role=role, shape=shape, layout_fallback=fell)
+        return {p: _norm_packed(s) for p, s in out.items()}
+
+    return produce
+
+
+def exemption_rule(specs: dict[str, TensorSpec],
+                   ctx: PlanContext) -> dict[str, TensorSpec]:
+    """The *wired* §4 1%-rule: smallest backbone tensors → exempt_bits.
+
+    Backbone = linears, convs and routers (heads/embeddings have their own
+    role precision).  Sizes are whole-tensor (stacked axes included), so a
+    vmap-stacked tensor is one all-layers decision — matching what one spec
+    per stacked path can express.
+    """
+    qcfg = ctx.qcfg
+    if qcfg.exempt_frac <= 0:
+        return specs
+    sizes = {p: s.size for p, s in specs.items()
+             if s.role in ("linear", "conv", "router")}
+    chosen = select_exempt_layers(sizes, qcfg)
+    out = {}
+    for p, s in specs.items():
+        if p in chosen:
+            s = _norm_packed(dataclasses.replace(
+                s, w_bits=qcfg.exempt_bits, exempt=True, origin="exempt-1%"))
+        out[p] = s
+    return out
+
+
+def apply_overrides(specs: dict[str, TensorSpec],
+                    ctx: PlanContext) -> dict[str, TensorSpec]:
+    """qcfg.layout_overrides / qcfg.bits_overrides under the path-glob
+    grammar; first matching pattern wins (same rule as QuantConfig.layout_for
+    so init-time and resolution-time agree on bare-name patterns).
+
+    Overrides that land nowhere warn instead of vanishing: a typo'd glob, or
+    a layout override aimed at a conv (convs carry the paper's per-cout
+    ``log_f``, not a QLayout'd ``log_swr``), must not be mistaken for applied.
+    """
+    qcfg = ctx.qcfg
+    bits_overrides = getattr(qcfg, "bits_overrides", ())
+    # counters keyed by POSITION, not pattern: with first-match-wins, a
+    # duplicated glob's second entry is dead and must still warn
+    applied = {("layout", i): 0 for i in range(len(qcfg.layout_overrides))}
+    applied.update({("bits", i): 0 for i in range(len(bits_overrides))})
+    out = {}
+    for path, s in specs.items():
+        for i, (pat, layout) in enumerate(qcfg.layout_overrides):
+            if glob_match(pat, path):
+                applied[("layout", i)] += 1
+                if s.role not in ("linear", "head", "router"):
+                    warnings.warn(
+                        f"layout override {pat!r} matches {path} "
+                        f"(role {s.role}), which has no QLayout'd log_swr; "
+                        f"ignored", UserWarning, stacklevel=4)
+                    break
+                eff, fell = _effective_layout(QLayout.parse(layout),
+                                              s.shape[-2])
+                if fell:
+                    ctx.fallbacks.append((path, str(QLayout.parse(layout)),
+                                          str(eff)))
+                s = dataclasses.replace(s, layout=str(eff),
+                                        layout_fallback=fell)
+                break
+        for i, (pat, bits) in enumerate(bits_overrides):
+            if glob_match(pat, path):
+                applied[("bits", i)] += 1
+                if s.role == "embed":
+                    # embeddings quantize at qcfg.embed_bits everywhere
+                    # (forward + export); a plan row claiming otherwise would
+                    # describe an artifact that is never produced
+                    warnings.warn(
+                        f"bits override {pat!r} matches embedding {path}; "
+                        f"ignored — set qcfg.embed_bits instead",
+                        UserWarning, stacklevel=4)
+                    break
+                # an explicit override supersedes the 1%-rule selection, so
+                # the exempt flag (and everything reporting it) is cleared
+                s = _norm_packed(dataclasses.replace(
+                    s, w_bits=int(bits), origin="override", exempt=False))
+                break
+        out[path] = s
+    all_overrides = {("layout", i): pat for i, (pat, _)
+                     in enumerate(qcfg.layout_overrides)}
+    all_overrides.update({("bits", i): pat for i, (pat, _)
+                          in enumerate(bits_overrides)})
+    unmatched = [f"{kind} override {all_overrides[kind, i]!r}"
+                 for (kind, i), n in applied.items() if n == 0]
+    if unmatched:
+        warnings.warn(
+            f"{'; '.join(unmatched)} matched no plan tensor — a duplicate "
+            f"or typo'd glob (known: {', '.join(specs)})",
+            UserWarning, stacklevel=4)
+    return out
+
+
+def make_sensitivity_producer(scores: dict[str, float], sensitive_bits: int,
+                              top_frac: float = 0.1) -> Producer:
+    """Example pluggable producer: keep the ``top_frac`` most sensitive
+    backbone tensors (by caller-supplied score, e.g. Hessian trace) at
+    ``sensitive_bits`` — the drop-in shape Sensitivity-Aware PTQ / EPTQ
+    orderings plug into."""
+
+    def produce(specs: dict[str, TensorSpec], ctx: PlanContext):
+        ranked = sorted((p for p in specs if p in scores),
+                        key=lambda p: -scores[p])
+        keep = set(ranked[: max(int(len(ranked) * top_frac), 1)])
+        return {p: (_norm_packed(dataclasses.replace(
+                        s, w_bits=sensitive_bits, origin="sensitivity"))
+                    if p in keep else s)
+                for p, s in specs.items()}
+
+    return produce
+
+
+# ---------------------------------------------------------------------------
+# Resolution entry point
+# ---------------------------------------------------------------------------
+
+def resolve_plan(qcfg: QuantConfig, params, model_cfg=None,
+                 producers: tuple = ()) -> QuantPlan:
+    """(QuantConfig, student params tree) → QuantPlan, via the producer chain.
+
+    ``params`` may be a real tree or ``jax.eval_shape`` output.  Extra
+    ``producers`` run after the built-in chain (sensitivity hooks etc.).
+    """
+    ctx = PlanContext(qcfg=qcfg, model_cfg=model_cfg)
+    specs: dict[str, TensorSpec] = {}
+    for produce in (default_ladder(params), exemption_rule, apply_overrides,
+                    *producers):
+        specs = produce(specs, ctx)
+    # report only fallbacks still live in the FINAL specs (an override that
+    # replaced a fallen-back default layout retires its record); last record
+    # per path wins when both the default and an override fell back
+    live = {}
+    for p, req, eff in ctx.fallbacks:
+        s = specs.get(p)
+        if s is not None and s.layout_fallback and s.layout == eff:
+            live[p] = (p, req, eff)
+    if live:
+        detail = "; ".join(f"{p}: {req} -> {eff}"
+                           for p, req, eff in live.values())
+        warnings.warn(
+            f"group layout does not divide d_in for {len(live)} "
+            f"tensor(s); fell back to a single group ({detail})",
+            UserWarning, stacklevel=2)
+    return QuantPlan(entries=tuple(specs.items()),
+                     default_bits=qcfg.w_bits,
+                     default_layout=str(qcfg.layout))
+
+
+def apply_plan(tree: Params, plan: QuantPlan) -> Params:
+    """Reconcile a freshly-initialized student with the resolved plan.
+
+    ``init_qlinear`` resolves bare-name layout overrides, but path-glob
+    overrides (and producer-assigned layouts) are only known post-resolution;
+    this pass re-shapes any ``log_swr`` whose layout disagrees with the plan.
+    Values are a constant fill — the MMSE init stage refits them right after.
+    """
+    def walk(node, prefix: tuple):
+        if isinstance(node, dict):
+            if _is_qlinear(node):
+                spec = plan.get(".".join(prefix))
+                if spec is None or spec.role == "conv":
+                    return node
+                w = node["w"]
+                layout = QLayout.parse(spec.layout)
+                want = w.shape[:-2] + layout.swr_shape(w.shape[-2],
+                                                      w.shape[-1])
+                if tuple(node["log_swr"].shape) == tuple(want):
+                    return node
+                import jax.numpy as jnp
+                fill = jnp.mean(node["log_swr"])
+                return {**node, "log_swr": jnp.full(want, fill, jnp.float32)}
+            return {k: v if k in STREAM_KEYS else walk(v, prefix + (k,))
+                    for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v, prefix + (str(i),))
+                              for i, v in enumerate(node))
+        return node
+
+    return walk(tree, ())
+
+
+# ---------------------------------------------------------------------------
+# Artifact embedding (JSON as a uint8 leaf — checkpoint/vmap-safe)
+# ---------------------------------------------------------------------------
+
+def plan_to_array(plan: QuantPlan):
+    import jax.numpy as jnp
+    return jnp.asarray(np.frombuffer(plan.to_json().encode(), np.uint8))
+
+
+def plan_from_array(arr) -> QuantPlan:
+    return QuantPlan.from_json(bytes(np.asarray(arr)).decode())

@@ -3,6 +3,13 @@
 "Instead [of exempting the first layer], for a flat overhead rate across nets,
 we quantize in 8b a few smallest layers, added-up by increasing size till their
 cumulative weight-memory footprint is 1% of the total across the backbone."
+
+Wired into plan resolution as ``core.plan.exemption_rule`` — the producer
+that turns this selection into per-tensor ``TensorSpec.w_bits``; every
+consumer (init, export, deploy, serving) then reads the plan.  Selection
+order is (size, name) ascending, so ties break deterministically and a layer
+is included iff it still fits the cumulative budget exactly (``acc + size <=
+budget``).
 """
 from __future__ import annotations
 

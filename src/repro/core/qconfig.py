@@ -101,8 +101,15 @@ class QuantConfig:
     a_bits: int | None = 8            # None → FP activations ("permissive")
     granularity: Granularity = Granularity.DCHW
     w_layout: QLayout | None = None   # None → derived from granularity
-    #: per-linear layout overrides: ((linear name, QLayout | spec str), ...)
+    #: per-tensor layout overrides: ((path-glob, QLayout | spec str), ...).
+    #: Patterns are fnmatch globs over the plan's path-qualified tensor name
+    #: (``layers.mlp.down``, ``convs.0``); a pattern without ``.`` also
+    #: matches the bare tensor name (old bare-name tuples keep working).
     layout_overrides: tuple = ()
+    #: per-tensor weight-bit overrides, same path-glob grammar:
+    #: ((path-glob, bits), ...).  Applied by core.plan.apply_overrides —
+    #: the last producer before caller hooks, so they win over the 1%-rule.
+    bits_overrides: tuple = ()
     exempt_bits: int = 8              # bits for exempted (smallest-1%) layers
     exempt_frac: float = 0.01         # cumulative weight-bytes fraction kept at
                                       # exempt_bits (paper's flat 1% rule, §4)
@@ -124,10 +131,14 @@ class QuantConfig:
         return QLayout("channel")
 
     def layout_for(self, name: str | None) -> QLayout:
-        """Per-linear layout: overrides from the quant plan, else the default."""
+        """Per-tensor layout: first matching ``layout_overrides`` glob wins,
+        else the default.  ``name`` may be a bare linear name (init time) or
+        a path-qualified plan name (resolution time) — the glob grammar
+        (core.plan.glob_match) treats both consistently."""
         if name is not None:
-            for n, layout in self.layout_overrides:
-                if n == name:
+            from .plan import glob_match
+            for pat, layout in self.layout_overrides:
+                if glob_match(pat, name):
                     return QLayout.parse(layout)
         return self.layout
 

@@ -37,7 +37,8 @@ from ..configs import SHAPES, get_config, input_specs, skip_reason, ARCH_IDS  # 
 from ..core import deployment_oriented  # noqa: E402
 from ..models import init_model, init_cache, set_runtime  # noqa: E402
 from ..optim.adam import paper_recipe  # noqa: E402
-from ..serve.deploy import export_for_layers, deploy_view  # noqa: E402
+from ..serve.deploy import (export_for_layers, deploy_view,  # noqa: E402
+                            make_deploy_plan)
 from ..sharding.partition import (ShardingPolicy, batch_shardings,
                                   cache_shardings, opt_state_shardings,
                                   params_shardings)  # noqa: E402
@@ -141,9 +142,14 @@ def build_cell(arch: str, shape: str, mesh, pol: ShardingPolicy,
                      donate_argnums=(0, 1))
         return fn, (student, opt_state, teacher, batch), cfg
 
-    # inference cells run the DEPLOYED artifact (int4-packed weights)
+    # inference cells run the DEPLOYED artifact (int4-packed weights).
+    # Resolve the DeployPlan (incl. the per-tensor QuantPlan) EAGERLY from
+    # the student shape tree: inside the traced step the embedded plan leaf
+    # is abstract and could not be decoded.
     student = _struct(init_model, key, cfg=cfg, qcfg=qcfg)
-    exported = _struct(export_for_layers, student, qcfg=qcfg)
+    dplan = make_deploy_plan(qcfg, arch=arch, family=cfg.family,
+                             params=student, model_cfg=cfg)
+    exported = _struct(export_for_layers, student, plan_or_qcfg=dplan)
     ex_sh = params_shardings(exported, cfg, mesh, pol)
 
     if sp.kind == "prefill":
@@ -151,7 +157,7 @@ def build_cell(arch: str, shape: str, mesh, pol: ShardingPolicy,
                         max_len=sp.seq_len + 8)
 
         def step(ex, cache, batch):
-            params = deploy_view(ex, qcfg)
+            params = deploy_view(ex, dplan)
             return make_prefill_step(cfg, None)(params, cache, batch)
     else:  # decode
         cache = _struct(init_cache, cfg=cfg, batch=sp.global_batch,
@@ -159,7 +165,7 @@ def build_cell(arch: str, shape: str, mesh, pol: ShardingPolicy,
                         enc_len=sp.seq_len if cfg.family == "encdec" else None)
 
         def step(ex, cache, batch):
-            params = deploy_view(ex, qcfg)
+            params = deploy_view(ex, dplan)
             return make_decode_step(cfg, None)(params, cache, batch)
 
     c_sh = cache_shardings(cache, cfg, mesh, pol)

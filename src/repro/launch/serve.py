@@ -67,6 +67,9 @@ def main() -> None:
     ap.add_argument("--use-pallas", action="store_true",
                     help="validate the Pallas quant_matmul route against the "
                          "exported artifact")
+    ap.add_argument("--show-plan", action="store_true",
+                    help="print the resolved per-tensor QuantPlan the "
+                         "artifact is served under")
     args = ap.parse_args()
     if args.arch in ("paper-cnn", "paper_cnn"):
         print("error: paper-cnn is a classifier — it has no token-serving "
@@ -94,6 +97,13 @@ def main() -> None:
             artifact = jax.jit(
                 lambda p: export_for_layers(p, result.plan))(student)
             print(f"restored trained student from {where}")
+
+    if args.show_plan:
+        if result.plan.quant_plan is not None:
+            print(result.plan.quant_plan.describe())
+        else:
+            print("no resolved QuantPlan on this DeployPlan (artifact "
+                  "predates plan embedding); re-export to embed one")
 
     if args.use_pallas:
         print(f"kernel route: {kernel_route_check(artifact, result.plan)}")

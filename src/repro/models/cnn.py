@@ -81,23 +81,27 @@ def qconv(x, p: Params, cfg: QuantConfig | None, stream: Params | None = None,
 
 def mmse_init_qconv(p: Params, cfg: QuantConfig,
                     log_sa_in: jax.Array | None = None,
-                    log_sa_out: jax.Array | None = None) -> Params:
+                    log_sa_out: jax.Array | None = None,
+                    bits: int | None = None) -> Params:
     """Fit F̂ by inverting Eq. 2 (paper §4): the total grid is
-    S_wL ⊗ (S_a_out·F̂); PPQ runs on W' = W·S_a_in[c_in]/S_a_out[c_out]."""
+    S_wL ⊗ (S_a_out·F̂); PPQ runs on W' = W·S_a_in[c_in]/S_a_out[c_out].
+    ``bits``: static per-conv override from the quant plan (exempt convs)."""
     w = p["w"]
+    bits = bits or cfg.w_bits
     if log_sa_in is not None:
         w = w * jnp.exp(log_sa_in)[None, None, :, None]
     if log_sa_out is not None:
         w = w / jnp.exp(log_sa_out)[None, None, None, :]
     w2 = w.reshape(-1, w.shape[-1])
     if cfg.swr_per_channel:
-        f = ppq_scale(w2, cfg.w_bits, axes=(0,), iters=cfg.mmse_iters)[0]
+        f = ppq_scale(w2, bits, axes=(0,), iters=cfg.mmse_iters)[0]
     else:
-        f = ppq_scale(w2, cfg.w_bits, axes=None, iters=cfg.mmse_iters).reshape(())
+        f = ppq_scale(w2, bits, axes=None, iters=cfg.mmse_iters).reshape(())
     return {**p, "log_f": jnp.log(jnp.maximum(f, 1e-12))}
 
 
-def apq_init_qconv(p: Params, cfg: QuantConfig) -> tuple[Params, jax.Array]:
+def apq_init_qconv(p: Params, cfg: QuantConfig,
+                   bits: int | None = None) -> tuple[Params, jax.Array]:
     """Doubly-channelwise init: APQ over the [kh*kw*cin?, cout] view.
 
     The paper's dCh conv quantization scales rows=c_in, cols=c_out; spatial
@@ -106,7 +110,8 @@ def apq_init_qconv(p: Params, cfg: QuantConfig) -> tuple[Params, jax.Array]:
     """
     kh, kw, cin, cout = p["w"].shape
     # per-cin row scale via PPQ on rows; per-cout via APQ on the 2D fold
-    s, t = apq_scales(p["w"].reshape(-1, cout), cfg.w_bits, cfg.mmse_iters)
+    s, t = apq_scales(p["w"].reshape(-1, cout), bits or cfg.w_bits,
+                      cfg.mmse_iters)
     log_swl_full = jnp.log(s[:, 0]).reshape(kh, kw, cin)
     log_swl = jnp.mean(log_swl_full, axis=(0, 1))
     return ({**p, "log_f": jnp.log(t[0, :])}, log_swl)
@@ -162,31 +167,38 @@ def _conv_stream_scales(params: Params, i: int):
 
 
 def export_cnn(params: Params, plan) -> Params:
-    """Whole-model CNN export under a serve.deploy.DeployPlan."""
+    """Whole-model CNN export under a serve.deploy.DeployPlan.  Per-conv
+    bits/packing come from the resolved QuantPlan (paths ``convs.<i>``,
+    ``fc``); the serialized plan rides inside the artifact."""
+    from ..core.plan import PLAN_KEY, plan_to_array
     qcfg = plan.qcfg
     out: Params = {"convs": []}
     for i, conv in enumerate(params["convs"]):
         log_in, log_out = _conv_stream_scales(params, i)
         out["convs"].append(export_qconv(conv, qcfg, log_in, log_out,
-                                         pack=plan.packed,
-                                         bits=plan.bits_for(f"conv{i}")))
+                                         pack=plan.is_packed(f"convs.{i}"),
+                                         bits=plan.bits_for(f"convs.{i}")))
     out["fc"] = dof.export_qlinear(
         params["fc"], qcfg,
         log_sa_in=params["fc_stream"]["log_sa"],
-        pack=plan.packed, bits=plan.bits_for("fc"))
+        pack=plan.is_packed("fc"), bits=plan.bits_for("fc"))
+    if getattr(plan, "quant_plan", None) is not None:
+        out[PLAN_KEY] = plan_to_array(plan.quant_plan)
     return out
 
 
 def cnn_deploy_view(exported: Params, plan, dtype=jnp.float32) -> Params:
-    """Exported CNN artifact → forward_cnn()-compatible tree (qcfg=None)."""
+    """Exported CNN artifact → forward_cnn()-compatible tree (qcfg=None).
+    Packing is read off each q leaf's dtype (uint8 ⇔ nibble-packed), the
+    artifact's own ground truth."""
     convs = [{"w": dof.dequantize_export(ex, dtype,
-                                         packed=plan.is_packed(f"conv{i}")),
-              "b": ex["b"]} for i, ex in enumerate(exported["convs"])]
+                                         packed=ex["q"].dtype == jnp.uint8),
+              "b": ex["b"]} for ex in exported["convs"]]
     fc_ex = exported["fc"]
     return {"convs": convs,
             "streams": [{} for _ in convs],
-            "fc": {"w": dof.dequantize_export(fc_ex, dtype,
-                                              packed=plan.is_packed("fc")),
+            "fc": {"w": dof.dequantize_export(
+                fc_ex, dtype, packed=fc_ex["q"].dtype == jnp.uint8),
                    "b": fc_ex["b"]}}
 
 
@@ -198,7 +210,7 @@ def cnn_effective_view(params: Params, plan, dtype=jnp.float32) -> Params:
         log_in, log_out = _conv_stream_scales(params, i)
         convs.append({"w": conv_effective_weight(
             conv, qcfg, log_in, log_out, dtype,
-            bits=plan.bits_for(f"conv{i}")), "b": conv["b"]})
+            bits=plan.bits_for(f"convs.{i}")), "b": conv["b"]})
     return {"convs": convs,
             "streams": [{} for _ in convs],
             "fc": {"w": dof.effective_weight(
@@ -227,10 +239,20 @@ def init_cnn(key, ccfg: CNNConfig, qcfg: QuantConfig | None) -> Params:
 
 
 def forward_cnn(params: Params, ccfg: CNNConfig, qcfg: QuantConfig | None,
-                x: jax.Array, collect_taps: bool = False) -> dict[str, Any]:
-    """x: [B, H, W, C]. Returns {features (pre-pool), pooled, logits, taps}."""
+                x: jax.Array, collect_taps: bool = False,
+                plan=None) -> dict[str, Any]:
+    """x: [B, H, W, C]. Returns {features (pre-pool), pooled, logits, taps}.
+
+    ``plan`` (core.plan.QuantPlan) supplies per-tensor fake-quant bits
+    (paths ``convs.<i>``, ``fc``) so training matches what exports; without
+    it the pre-plan role defaults apply (convs at w_bits, fc exempt)."""
     taps: dict | None = {} if collect_taps else None
     n_convs = len(params["convs"])
+
+    def _bits(path: str, default: int) -> int | None:
+        if qcfg is None:
+            return None
+        return plan.bits_for(path) if plan is not None else default
     for i, (cp, st) in enumerate(zip(params["convs"], params["streams"])):
         if taps is not None:
             xf = x.astype(jnp.float32).reshape(-1, x.shape[-1])
@@ -243,7 +265,9 @@ def forward_cnn(params: Params, ccfg: CNNConfig, qcfg: QuantConfig | None,
         else:
             st_out = params.get("fc_stream")
         x = qconv(x, cp, qcfg, stream=st if qcfg is not None else None,
-                  stream_out=st_out, stride=2 if i else 1)
+                  stream_out=st_out, stride=2 if i else 1,
+                  bits=_bits(f"convs.{i}", None if qcfg is None
+                             else qcfg.w_bits))
         x = jax.nn.relu(x)
         if taps is not None:
             xf = x.astype(jnp.float32).reshape(-1, x.shape[-1])
@@ -253,5 +277,6 @@ def forward_cnn(params: Params, ccfg: CNNConfig, qcfg: QuantConfig | None,
     pooled = jnp.mean(x, axis=(1, 2))        # global average pool
     logits = dof.qlinear(pooled, params["fc"], qcfg,
                          stream=params.get("fc_stream"),
-                         bits=None if qcfg is None else qcfg.exempt_bits)
+                         bits=_bits("fc", None if qcfg is None
+                                    else qcfg.exempt_bits))
     return {"features": feats, "pooled": pooled, "logits": logits, "taps": taps}

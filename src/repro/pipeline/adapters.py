@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from ..core.calibration import stream_params_from_range
 from ..core.distill import backbone_l2
+from ..core.plan import QuantPlan, apply_plan, resolve_plan
 from ..core.qconfig import Granularity, QuantConfig
 from ..data.calib import CalibConfig, CalibDataset
 from ..models import forward, init_model
@@ -28,6 +29,24 @@ from ..train.qft_trainer import QFTConfig, QFTTrainer
 from .config import PipelineConfig
 
 Params = dict[str, Any]
+
+
+def resolve_quant_plan(model_cfg, qcfg: QuantConfig,
+                       producers: tuple = ()) -> QuantPlan:
+    """Resolve the per-tensor QuantPlan for a registry config.
+
+    The student skeleton is built under ``jax.eval_shape`` — no allocation,
+    so this is cheap even for the 100B+ registry entries (what the
+    ``python -m repro plan`` CLI relies on)."""
+    if getattr(model_cfg, "family", None) == "cnn":
+        shapes = jax.eval_shape(
+            lambda k: cnn_lib.init_cnn(k, model_cfg, qcfg),
+            jax.random.PRNGKey(0))
+    else:
+        shapes = jax.eval_shape(
+            lambda k: init_model(k, model_cfg, qcfg), jax.random.PRNGKey(0))
+    return resolve_plan(qcfg, shapes, model_cfg=model_cfg,
+                        producers=producers)
 
 
 def tree_parity_error(deployed: Params, effective: Params) -> float:
@@ -57,6 +76,23 @@ class TransformerAdapter:
         self.pcfg = pcfg
         self.cfg = model_cfg
         self.qcfg = qcfg
+        self.qplan = resolve_quant_plan(model_cfg, qcfg)
+        # the transformer training forward reads role-ladder bits (stacked
+        # layers can't read per-path plan bits yet — see ROADMAP);
+        # init/export/serving honor the plan, so surface any gap loudly
+        # instead of silently training against a different grid
+        fwd_bits = {"linear": qcfg.w_bits, "head": qcfg.embed_bits,
+                    "router": getattr(getattr(model_cfg, "moe", None),
+                                      "router_bits", qcfg.exempt_bits)}
+        offgrid = [p for p, s in self.qplan
+                   if s.role in fwd_bits and s.w_bits != fwd_bits[s.role]]
+        if offgrid:
+            import warnings
+            warnings.warn(
+                f"plan assigns non-default bits to {', '.join(offgrid)}; the "
+                f"transformer finetune/degradation forward still fake-quants "
+                f"them at the role-ladder bits while init/export/serving use "
+                f"the plan bits", UserWarning, stacklevel=2)
         self.data = CalibDataset(CalibConfig(
             n_samples=pcfg.calib_samples, seq_len=pcfg.calib_seq_len,
             batch_size=pcfg.calib_batch_size, vocab=model_cfg.vocab,
@@ -106,8 +142,12 @@ class TransformerAdapter:
 
     # --------------------------------------------------------------- stages
     def build_student(self, teacher: Params) -> Params:
-        return qft_trainer.build_student(jax.random.PRNGKey(self.pcfg.seed + 1),
-                                         self.cfg, self.qcfg, teacher)
+        student = qft_trainer.build_student(
+            jax.random.PRNGKey(self.pcfg.seed + 1), self.cfg, self.qcfg,
+            teacher)
+        # reconcile log_swr shapes with the resolved plan (path-glob layout
+        # overrides that bare-name init couldn't see)
+        return apply_plan(student, self.qplan)
 
     def calibrate(self, student: Params, teacher: Params) -> Params:
         return qft_trainer.calibrate_student(student, self.cfg, self.qcfg,
@@ -115,7 +155,8 @@ class TransformerAdapter:
 
     def init_scales(self, student: Params) -> Params:
         return qft_trainer.init_scales(student, self.cfg, self.qcfg,
-                                       cle_init=self.pcfg.cle)
+                                       cle_init=self.pcfg.cle,
+                                       plan=self.qplan)
 
     def finetune(self, student: Params, teacher: Params,
                  ckpt=None) -> tuple[Params, list[dict]]:
@@ -129,7 +170,8 @@ class TransformerAdapter:
     def make_plan(self) -> DeployPlan:
         return make_deploy_plan(self.qcfg, arch=self.pcfg.arch,
                                 family=self.cfg.family,
-                                use_pallas=self.pcfg.use_pallas)
+                                use_pallas=self.pcfg.use_pallas,
+                                quant_plan=self.qplan)
 
     def export(self, student: Params, plan: DeployPlan) -> Params:
         return jax.jit(lambda p: export_for_layers(p, plan))(student)
@@ -150,6 +192,7 @@ class TransformerAdapter:
                  plan: DeployPlan) -> dict:
         metrics = self.degradation(student, teacher)
         metrics["w_layout"] = str(self.qcfg.layout)
+        metrics["exempt"] = sorted(self.qplan.exempt_names)
         dv = deploy_view(artifact, plan, dtype=jnp.float32)
         ev = effective_view(student, plan, dtype=jnp.float32)
         metrics["export_parity_max_err"] = tree_parity_error(dv, ev)
@@ -185,6 +228,7 @@ class CNNAdapter:
         self.pcfg = pcfg
         self.cfg = model_cfg                    # CNNConfig
         self.qcfg = qcfg
+        self.qplan = resolve_quant_plan(model_cfg, qcfg)
         n = max(pcfg.calib_samples, 256)
         self.x_calib, self.y_calib = self._synth(jax.random.PRNGKey(pcfg.seed),
                                                  n)
@@ -209,9 +253,9 @@ class CNNAdapter:
         x = basis[y] + jax.random.normal(kn, (n, hw, hw, cfg.in_ch))
         return x.astype(jnp.float32), y
 
-    def accuracy(self, params: Params, qcfg) -> float:
+    def accuracy(self, params: Params, qcfg, plan=None) -> float:
         logits = cnn_lib.forward_cnn(params, self.cfg, qcfg,
-                                     self.x_eval)["logits"]
+                                     self.x_eval, plan=plan)["logits"]
         return float(jnp.mean(jnp.argmax(logits, -1) == self.y_eval))
 
     def init_teacher(self) -> Params:
@@ -249,7 +293,7 @@ class CNNAdapter:
         for i, conv in enumerate(teacher["convs"]):
             student["convs"][i].update({"w": conv["w"], "b": conv["b"]})
         student["fc"].update({"w": teacher["fc"]["w"], "b": teacher["fc"]["b"]})
-        return student
+        return apply_plan(student, self.qplan)
 
     def calibrate(self, student: Params, teacher: Params) -> Params:
         """Naive max-min range calibration from teacher taps (paper §4);
@@ -271,8 +315,9 @@ class CNNAdapter:
 
     def init_scales(self, student: Params) -> Params:
         """MMSE (PPQ) / APQ init of every conv's F̂ by inverting Eq. 2 under
-        the calibrated stream ties; fc under its stream tie at exempt bits."""
-        qcfg = self.qcfg
+        the calibrated stream ties; per-tensor fit bits (exempt convs, the
+        fc head) come from the resolved QuantPlan."""
+        qcfg, qplan = self.qcfg, self.qplan
         n = len(student["convs"])
 
         def out_stream(i):
@@ -282,7 +327,8 @@ class CNNAdapter:
         if qcfg.granularity is Granularity.DCHW:
             apq_t = {}
             for i, conv in enumerate(list(student["convs"])):
-                newc, log_swl = cnn_lib.apq_init_qconv(conv, qcfg)
+                newc, log_swl = cnn_lib.apq_init_qconv(
+                    conv, qcfg, bits=qplan.bits_for(f"convs.{i}"))
                 apq_t[i] = newc["log_f"]        # total right scale log t
                 student["convs"][i] = newc
                 student["streams"][i]["log_sa"] = -log_swl
@@ -295,10 +341,11 @@ class CNNAdapter:
                 student["convs"][i] = cnn_lib.mmse_init_qconv(
                     conv, qcfg,
                     log_sa_in=student["streams"][i]["log_sa"],
-                    log_sa_out=out_stream(i)["log_sa"])
+                    log_sa_out=out_stream(i)["log_sa"],
+                    bits=qplan.bits_for(f"convs.{i}"))
         from ..core.dof import mmse_init_qlinear
         student["fc"] = mmse_init_qlinear(
-            student["fc"], qcfg, bits=qcfg.exempt_bits,
+            student["fc"], qcfg, bits=qplan.bits_for("fc"),
             log_sa_in=student["fc_stream"]["log_sa"])
         if self.pcfg.cle and qcfg.granularity is not Granularity.DCHW:
             student = self._cle(student, out_stream)
@@ -332,10 +379,10 @@ class CNNAdapter:
         opt = paper_recipe(steps_per_epoch=max(steps // 3, 1),
                            base_lr=self.pcfg.base_lr)
         state = opt.init(student)
-        cfg, qcfg = self.cfg, self.qcfg
+        cfg, qcfg, qplan = self.cfg, self.qcfg, self.qplan
 
         def loss_fn(p, x):
-            fs = cnn_lib.forward_cnn(p, cfg, qcfg, x)["features"]
+            fs = cnn_lib.forward_cnn(p, cfg, qcfg, x, plan=qplan)["features"]
             ft = cnn_lib.forward_cnn(teacher, cfg, None, x)["features"]
             return backbone_l2(fs.reshape(fs.shape[0], -1, fs.shape[-1]),
                                ft.reshape(ft.shape[0], -1, ft.shape[-1]))
@@ -366,7 +413,8 @@ class CNNAdapter:
 
     def make_plan(self) -> DeployPlan:
         return make_deploy_plan(self.qcfg, arch=self.pcfg.arch, family="cnn",
-                                use_pallas=self.pcfg.use_pallas)
+                                use_pallas=self.pcfg.use_pallas,
+                                quant_plan=self.qplan)
 
     def export(self, student: Params, plan: DeployPlan) -> Params:
         return cnn_lib.export_cnn(student, plan)
@@ -380,8 +428,10 @@ class CNNAdapter:
             # convs keep the paper's lw/chw scale shapes; the group layout
             # applies to the fc qlinear only (QLayout falls back per layer)
             "w_layout": str(self.qcfg.layout),
+            "exempt": sorted(self.qplan.exempt_names),
             "acc_teacher": self.accuracy(teacher, None),
-            "acc_student": self.accuracy(student, self.qcfg),
+            "acc_student": self.accuracy(student, self.qcfg,
+                                         plan=self.qplan),
             "acc_deployed": self.accuracy(dv, None),
             "export_parity_max_err": tree_parity_error(dv, ev),
             "artifact_bytes": int(sum(

@@ -2,12 +2,18 @@
 
     python -m repro quantize --config qwen3_8b --w-bits 4 --steps 60
     python -m repro quantize --config paper_cnn --steps 2
+    python -m repro plan --config qwen3_8b --w-layout group:128
     python -m repro list-configs
 
 ``quantize`` resolves any model in configs/registry.py (module or registry
 spelling) and runs the full calibrate → MMSE/APQ init → QFT finetune →
 export → evaluate pipeline, printing per-stage progress and the final
 export-parity / degradation metrics.
+
+``plan`` prints the resolved QuantPlan — the per-tensor
+bits/layout/stream/packing table every pipeline stage consumes — without
+running anything (shapes come from ``jax.eval_shape``, so even the 100B+
+registry entries resolve instantly).
 """
 from __future__ import annotations
 
@@ -55,15 +61,57 @@ def build_parser() -> argparse.ArgumentParser:
                    help="transformers: decode a demo batch from the artifact")
     q.add_argument("--use-pallas", action="store_true",
                    help="route deployed matmuls through kernels/quant_matmul")
+    _add_plan_knobs(q)
+
+    p = sub.add_parser(
+        "plan", help="print the resolved per-tensor QuantPlan table")
+    p.add_argument("--config", default=None,
+                   help="registry entry (omit with --all)")
+    p.add_argument("--all", action="store_true",
+                   help="print the plan for every registry entry")
+    p.add_argument("--mode", choices=MODES, default="w4a8")
+    p.add_argument("--w-bits", type=int, default=None)
+    p.add_argument("--w-layout", default=None, metavar="LAYOUT")
+    p.add_argument("--full", action="store_true",
+                   help="full-size config (default: registry SMOKE)")
+    p.add_argument("--json", action="store_true",
+                   help="emit the serialized plan instead of the table")
+    _add_plan_knobs(p)
 
     sub.add_parser("list-configs", help="print every registry entry")
     return ap
 
 
+def _add_plan_knobs(sp) -> None:
+    sp.add_argument("--exempt-frac", type=float, default=None,
+                    help="§4 1%%-rule weight-memory budget (0 disables)")
+    sp.add_argument("--bits-override", action="append", default=[],
+                    metavar="GLOB=BITS",
+                    help="per-tensor bits override (path-glob grammar), "
+                         "e.g. --bits-override 'convs.0=8'; repeatable")
+    sp.add_argument("--layout-override", action="append", default=[],
+                    metavar="GLOB=LAYOUT",
+                    help="per-tensor layout override, e.g. "
+                         "--layout-override 'layers.mlp.*=group:64'")
+
+
+def _parse_overrides(pairs: list[str], what: str) -> tuple:
+    out = []
+    for item in pairs:
+        glob, sep, val = item.partition("=")
+        if not sep or not glob or not val:
+            raise ValueError(f"--{what} expects GLOB=VALUE, got {item!r}")
+        out.append((glob, val))
+    return tuple(out)
+
+
 def _pcfg_from_args(args: argparse.Namespace) -> PipelineConfig:
     return PipelineConfig(
         arch=args.config, mode=args.mode, w_bits=args.w_bits,
-        w_layout=args.w_layout,
+        w_layout=args.w_layout, exempt_frac=args.exempt_frac,
+        bits_overrides=_parse_overrides(args.bits_override, "bits-override"),
+        layout_overrides=_parse_overrides(args.layout_override,
+                                          "layout-override"),
         smoke=not args.full, steps=args.steps, seed=args.seed, cle=args.cle,
         base_lr=args.base_lr, teacher_steps=args.teacher_steps,
         calib_samples=args.calib_samples, calib_seq_len=args.calib_seq_len,
@@ -76,10 +124,10 @@ def _pcfg_from_args(args: argparse.Namespace) -> PipelineConfig:
 def cmd_quantize(args: argparse.Namespace) -> int:
     try:
         pcfg = _pcfg_from_args(args)
+        qcfg = pcfg.quant_config()     # raises on e.g. --bits-override fc=x
     except (KeyError, ValueError) as e:
         print(f"error: {e.args[0]}", file=sys.stderr)
         return 2
-    qcfg = pcfg.quant_config()
     print(f"pipeline: {pcfg.arch} mode={pcfg.mode} "
           f"w{qcfg.w_bits} layout={qcfg.layout} steps={pcfg.steps} "
           f"stages={' -> '.join(pcfg.stages())}")
@@ -104,6 +152,45 @@ def cmd_quantize(args: argparse.Namespace) -> int:
     return 0
 
 
+def cmd_plan(args: argparse.Namespace) -> int:
+    """Resolve and print the QuantPlan table (or JSON) per config."""
+    from .adapters import resolve_quant_plan
+    if not args.all and args.config is None:
+        print("error: plan needs --config <entry> or --all", file=sys.stderr)
+        return 2
+    archs = (sorted(registry._MODULES) if args.all else [args.config])
+    try:
+        bits_ov = _parse_overrides(args.bits_override, "bits-override")
+        layout_ov = _parse_overrides(args.layout_override, "layout-override")
+    except ValueError as e:
+        print(f"error: {e.args[0]}", file=sys.stderr)
+        return 2
+    rc = 0
+    for arch in archs:
+        try:
+            # NOTE: keep these fields in sync with _pcfg_from_args — any new
+            # plan-affecting quantize knob must reach both subcommands
+            pcfg = PipelineConfig(
+                arch=arch, mode=args.mode, w_bits=args.w_bits,
+                w_layout=args.w_layout, exempt_frac=args.exempt_frac,
+                bits_overrides=bits_ov, layout_overrides=layout_ov,
+                smoke=not args.full, steps=0)
+            qcfg = pcfg.quant_config()
+            plan = resolve_quant_plan(pcfg.model_config(), qcfg)
+        except (KeyError, ValueError) as e:
+            # one broken entry must not kill an --all sweep
+            print(f"error ({arch}): {e.args[0]}", file=sys.stderr)
+            rc = 2
+            if not args.all:
+                return rc
+            continue
+        print(f"## {pcfg.arch} mode={pcfg.mode} w{qcfg.w_bits} "
+              f"layout={qcfg.layout} exempt_frac={qcfg.exempt_frac}")
+        print(plan.to_json(indent=1) if args.json else plan.describe())
+        print()
+    return rc
+
+
 def cmd_list_configs() -> int:
     for arch, module in sorted(registry._MODULES.items()):
         print(f"{arch:<22s} repro.configs.{module}")
@@ -114,6 +201,8 @@ def main(argv=None) -> int:
     args = build_parser().parse_args(argv)
     if args.command == "quantize":
         return cmd_quantize(args)
+    if args.command == "plan":
+        return cmd_plan(args)
     if args.command == "list-configs":
         return cmd_list_configs()
     return 2

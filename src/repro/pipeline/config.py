@@ -41,6 +41,10 @@ class PipelineConfig:
     w_bits: int | None = None         # override the mode's weight bits
     w_layout: str | None = None       # weight-scale layout override:
                                       # layerwise | channel | group:<g>
+    exempt_frac: float | None = None  # override the §4 1%-rule budget
+                                      # (0 disables the exemption producer)
+    bits_overrides: tuple = ()        # ((path-glob, bits), ...) plan rows
+    layout_overrides: tuple = ()      # ((path-glob, layout spec), ...)
     smoke: bool = True                # registry SMOKE config (CPU-sized)
     steps: int = 60                   # QFT finetune steps (0 skips training)
     seed: int = 0
@@ -83,6 +87,15 @@ class PipelineConfig:
         if self.w_layout is not None:
             qcfg = dataclasses.replace(qcfg,
                                        w_layout=QLayout.parse(self.w_layout))
+        if self.exempt_frac is not None:
+            qcfg = dataclasses.replace(qcfg, exempt_frac=self.exempt_frac)
+        if self.bits_overrides:
+            qcfg = dataclasses.replace(
+                qcfg, bits_overrides=tuple(
+                    (p, int(b)) for p, b in self.bits_overrides))
+        if self.layout_overrides:
+            qcfg = dataclasses.replace(
+                qcfg, layout_overrides=tuple(self.layout_overrides))
         return qcfg
 
     def stages(self) -> tuple[str, ...]:

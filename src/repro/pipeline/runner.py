@@ -83,6 +83,10 @@ def run_pipeline(pcfg: PipelineConfig,
 
     artifact = None
     plan = adapter.make_plan()
+    if plan.quant_plan is not None:
+        ex = plan.quant_plan.exempt_names
+        log(f"plan: {len(plan.quant_plan)} tensors"
+            + (f", 1%-rule exempt: {', '.join(sorted(ex))}" if ex else ""))
     metrics: dict[str, Any] = {}
     history: list[dict] = []
     stages_run, stages_skipped = [], []

@@ -8,12 +8,21 @@ are dequantized on the fly inside the jitted serving step (unpack+scale fuse
 into the matmul's producer; on real TPUs kernels/quant_matmul.py does this in
 VMEM tiles).
 
+Per-tensor decisions (bits, layout, stream tie, packing) come from the
+resolved :class:`repro.core.plan.QuantPlan` carried by the
+:class:`DeployPlan`; every walk here is path-qualified so lookups hit the
+same names resolution produced.  Exported artifacts embed the serialized
+plan as a uint8 leaf (``core.plan.PLAN_KEY``), so ``deploy_view`` /
+``Engine.from_artifact`` can reconstruct the decisions from the artifact
+alone.
+
 Weight memory: 4-bit packed → ~0.5 byte/param held in HBM (visible in the
 dry-run memory_analysis), vs 2 bytes bf16.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any
 
 import jax
@@ -21,31 +30,25 @@ import jax.numpy as jnp
 
 from ..core import dof
 from ..core.fakequant import fake_quant, quantize
+from ..core.plan import (PLAN_KEY, STREAM_KEYS, STREAM_OF,  # noqa: F401
+                         QuantPlan, _is_qlinear, plan_from_array,
+                         plan_to_array, resolve_plan)
 from ..core.qconfig import QLayout, QuantConfig
 
 Params = dict[str, Any]
 
-# linear-name → stream-name that supplies S_wL (Eq. 2 tying; fan-out shares)
-STREAM_OF = {
-    "wq": "in_stream", "wk": "in_stream", "wv": "in_stream",
-    "wo": "out_stream",
-    "up": "in_stream", "gate": "in_stream", "down": "act_stream",
-    "router": "in_stream",
-    "shared_up": "in_stream", "shared_gate": "in_stream",
-    "shared_down": "shared_act_stream",
-    "q_down": "in_stream", "kv_down": "in_stream",
-    "q_up": "q_stream", "k_up": "kv_stream", "v_up": "kv_stream",
-    "in_proj": "in_stream", "out_proj": "out_stream",
-    "lm_head": "head_stream", "fc": "fc_stream",
-    "frame_proj": None,
-}
-EXEMPT_8B = {"router", "lm_head", "fc"}        # exempt linears stay int8
-STREAM_KEYS = {"in_stream", "out_stream", "act_stream", "shared_act_stream",
-               "q_stream", "kv_stream", "head_stream", "fc_stream"}
+# Deprecation shim only: the bare-name exemption set artifacts exported
+# before QuantPlan were frozen under.  New code never reads this — the
+# resolved plan is the single source of per-tensor bits.
+_LEGACY_EXEMPT_8B = frozenset({"router", "lm_head", "fc"})
 
 
-def _is_qlinear(node) -> bool:
-    return isinstance(node, dict) and "w" in node and "log_swr" in node
+def _warn_legacy(what: str) -> None:
+    warnings.warn(
+        f"DeployPlan has no resolved QuantPlan; falling back to the legacy "
+        f"bare-name heuristic for {what}. Re-export the artifact (new "
+        f"exports embed the plan) or pass params= to make_deploy_plan.",
+        DeprecationWarning, stacklevel=3)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,42 +57,92 @@ class DeployPlan:
 
     The one object every consumer of an exported artifact reads — the serving
     engine (serve/engine.py), the deploy view, and the Pallas
-    kernels/quant_matmul path — instead of each re-deriving packing/bits from
-    (qcfg, EXEMPT_8B, dtype) on its own.
+    kernels/quant_matmul path.  Per-tensor truth lives in ``quant_plan``
+    (path-qualified); the remaining fields are run-level routing knobs.
     """
     qcfg: QuantConfig
     arch: str = ""
     family: str = "dense"
-    packed: bool = True               # int4 nibble-packing for non-exempt linears
-    exempt: frozenset = frozenset(EXEMPT_8B)
+    packed: bool = True               # legacy global default (shim path only)
     use_pallas: bool = False          # route matmuls through kernels/quant_matmul
     interpret: bool | None = None     # Pallas interpret mode; None → auto
                                       # (interpret everywhere except real TPU)
     layout: QLayout | None = None     # default weight-scale layout the export
                                       # ran under (None → qcfg.layout); the
-                                      # per-layer truth is each s_wr's shape
-                                      # (dof.swr_layout_kind), overrides in
-                                      # qcfg.layout_overrides
+                                      # per-tensor truth is quant_plan
+    quant_plan: QuantPlan | None = None
 
-    def bits_for(self, name: str) -> int:
-        return self.qcfg.exempt_bits if name in self.exempt else self.qcfg.w_bits
+    def spec_for(self, path: str):
+        return None if self.quant_plan is None else self.quant_plan.get(path)
 
-    def is_packed(self, name: str) -> bool:
-        return self.packed and self.bits_for(name) == 4
+    def bits_for(self, path: str) -> int:
+        if self.quant_plan is not None:
+            return self.quant_plan.bits_for(path)
+        _warn_legacy(f"bits_for({path!r})")
+        name = path.rsplit(".", 1)[-1]
+        return (self.qcfg.exempt_bits if name in _LEGACY_EXEMPT_8B
+                else self.qcfg.w_bits)
+
+    def is_packed(self, path: str) -> bool:
+        if self.quant_plan is not None:
+            return self.quant_plan.is_packed(path)
+        return self.packed and self.bits_for(path) == 4
 
 
 def make_deploy_plan(qcfg: QuantConfig, arch: str = "", family: str = "dense",
-                     use_pallas: bool = False, interpret: bool | None = None
-                     ) -> DeployPlan:
+                     use_pallas: bool = False, interpret: bool | None = None,
+                     quant_plan: QuantPlan | None = None, params=None,
+                     model_cfg=None) -> DeployPlan:
+    """Build the deploy plan; pass either a pre-resolved ``quant_plan`` or the
+    (student) ``params`` tree to resolve one — exemptions then come from the
+    resolved plan, never from a frozen name set."""
+    if quant_plan is None and params is not None:
+        quant_plan = resolve_plan(qcfg, params, model_cfg=model_cfg)
     return DeployPlan(qcfg=qcfg, arch=arch, family=family,
                       packed=qcfg.w_bits == 4, use_pallas=use_pallas,
-                      interpret=interpret, layout=qcfg.layout)
+                      interpret=interpret, layout=qcfg.layout,
+                      quant_plan=quant_plan)
 
 
-def _as_plan(plan_or_qcfg) -> DeployPlan:
+def plan_from_artifact(exported: Params) -> QuantPlan | None:
+    """Recover the QuantPlan embedded in an exported artifact (None if the
+    artifact predates plan embedding)."""
+    arr = exported.get(PLAN_KEY) if isinstance(exported, dict) else None
+    if arr is None:
+        return None
+    if isinstance(arr, (jax.core.Tracer, jax.ShapeDtypeStruct)):
+        # inside jit/eval_shape the leaf is abstract and cannot be decoded —
+        # not corruption; callers tracing deploy_view should resolve the
+        # DeployPlan eagerly outside the trace (see launch/dryrun.py)
+        return None
+    try:
+        return plan_from_array(arr)
+    except Exception as e:                             # noqa: BLE001
+        # a PRESENT-but-undecodable plan is corruption (truncated leaf,
+        # future schema) — don't silently downgrade to the legacy heuristic
+        warnings.warn(
+            f"embedded quant plan failed to decode ({type(e).__name__}: {e});"
+            f" falling back to legacy bare-name heuristics — the artifact "
+            f"may be corrupted", UserWarning, stacklevel=3)
+        return None
+
+
+def _as_plan(plan_or_qcfg, params=None, artifact=None) -> DeployPlan:
+    """Normalize to a DeployPlan with a resolved QuantPlan where possible:
+    resolve from ``params`` (export side) or recover the plan embedded in
+    ``artifact`` (deploy side).  Bare qcfg + neither → legacy shim path."""
     if isinstance(plan_or_qcfg, DeployPlan):
-        return plan_or_qcfg
-    return make_deploy_plan(plan_or_qcfg)
+        plan = plan_or_qcfg
+    else:
+        plan = make_deploy_plan(plan_or_qcfg, params=params)
+    if plan.quant_plan is None and artifact is not None:
+        qp = plan_from_artifact(artifact)
+        if qp is not None:
+            plan = dataclasses.replace(plan, quant_plan=qp)
+    if plan.quant_plan is None and params is not None:
+        plan = dataclasses.replace(
+            plan, quant_plan=resolve_plan(plan.qcfg, params))
+    return plan
 
 
 def _stream_log_sa(name: str, parent: Params):
@@ -98,14 +151,16 @@ def _stream_log_sa(name: str, parent: Params):
     return None if stream is None else stream["log_sa"]
 
 
-def _export_node(name: str, node: Params, parent: Params,
+def _export_node(path: tuple, node: Params, parent: Params,
                  plan: DeployPlan) -> Params:
+    dotted = ".".join(path)
     return dof.export_qlinear(node, plan.qcfg,
-                              log_sa_in=_stream_log_sa(name, parent),
-                              pack=plan.packed, bits=plan.bits_for(name))
+                              log_sa_in=_stream_log_sa(path[-1], parent),
+                              pack=plan.is_packed(dotted),
+                              bits=plan.bits_for(dotted))
 
 
-def _walk(tree, plan: DeployPlan, parent_key: str = ""):
+def _walk(tree, plan: DeployPlan, prefix: tuple = ()):
     qcfg = plan.qcfg
     if isinstance(tree, dict):
         if "w" in tree and "log_s" in tree:          # quantized embedding
@@ -117,25 +172,34 @@ def _walk(tree, plan: DeployPlan, parent_key: str = ""):
             if k in STREAM_KEYS:
                 continue                             # folded into weights
             if _is_qlinear(v):
-                out[k] = _export_node(k, v, tree, plan)
+                out[k] = _export_node(prefix + (k,), v, tree, plan)
             else:
-                out[k] = _walk(v, plan, k)
+                out[k] = _walk(v, plan, prefix + (k,))
         return out
     if isinstance(tree, (list, tuple)):
-        return type(tree)(_walk(v, plan) for v in tree)
+        return type(tree)(_walk(v, plan, prefix + (str(i),))
+                          for i, v in enumerate(tree))
     return tree
 
 
 def export_model(params: Params, plan_or_qcfg) -> Params:
     """Trained student params → deployment artifact (pure function; run under
-    jit/eval_shape so 100B+ exports never materialize on the host)."""
-    return _walk(params, _as_plan(plan_or_qcfg))
+    jit/eval_shape so 100B+ exports never materialize on the host).  The
+    serialized QuantPlan rides along as a uint8 leaf under PLAN_KEY."""
+    plan = _as_plan(plan_or_qcfg, params=params)
+    out = _walk(params, plan)
+    if plan.quant_plan is not None:
+        out[PLAN_KEY] = plan_to_array(plan.quant_plan)
+    return out
 
 
-def _deploy_node(name: str, ex: Params, plan: DeployPlan,
+def _deploy_node(path: tuple, ex: Params, plan: DeployPlan,
                  dtype=jnp.bfloat16) -> Params:
-    out: Params = {"w": dof.dequantize_export(ex, dtype,
-                                              packed=plan.is_packed(name))}
+    # whether q is nibble-packed is authoritative in the artifact itself
+    # (uint8 ⇔ packed) — never second-guess it from plan/legacy lookups,
+    # which can disagree for pre-plan artifacts with nonstandard exemptions
+    out: Params = {"w": dof.dequantize_export(
+        ex, dtype, packed=ex["q"].dtype == jnp.uint8)}
     if "b" in ex:
         out["b"] = ex["b"]
     return out
@@ -144,35 +208,41 @@ def _deploy_node(name: str, ex: Params, plan: DeployPlan,
 def deploy_view(exported: Params, plan_or_qcfg,
                 dtype=jnp.bfloat16) -> Params:
     """Exported artifact → forward()-compatible tree (weights dequantized in
-    the serving graph; use with qcfg=None in forward)."""
-    plan = _as_plan(plan_or_qcfg)
+    the serving graph; use with qcfg=None in forward).  Per-tensor packing /
+    bits come from the plan embedded in the artifact when the caller passes a
+    bare qcfg."""
+    plan = _as_plan(plan_or_qcfg, artifact=exported)
 
-    def walk(tree, key=""):
+    def walk(tree, prefix: tuple = ()):
         if isinstance(tree, dict):
             if "q" in tree and "s" in tree:          # embedding
                 return {"w": tree["q"].astype(jnp.float32) * tree["s"]}
             if "q" in tree and "s_wr" in tree:
-                return _deploy_node(key, tree, plan, dtype)
-            return {k: walk(v, k) for k, v in tree.items()}
+                return _deploy_node(prefix, tree, plan, dtype)
+            return {k: walk(v, prefix + (k,)) for k, v in tree.items()
+                    if k != PLAN_KEY}
         if isinstance(tree, (list, tuple)):
-            return type(tree)(walk(v) for v in tree)
+            return type(tree)(walk(v, prefix + (str(i),))
+                              for i, v in enumerate(tree))
         return tree
     return walk(exported)
 
 
 def export_for_layers(params: Params, plan_or_qcfg) -> Params:
     """export_model with layer-stacked subtrees handled under vmap."""
-    plan = _as_plan(plan_or_qcfg)
+    plan = _as_plan(plan_or_qcfg, params=params)
     out = {}
     for k, v in params.items():
         if k in ("layers", "enc_layers", "dec_layers", "tail"):
-            out[k] = jax.vmap(lambda lp: _walk(lp, plan))(v)
+            out[k] = jax.vmap(lambda lp: _walk(lp, plan, (k,)))(v)
         elif k in STREAM_KEYS:
             continue
         elif _is_qlinear(v):
-            out[k] = _export_node(k, v, params, plan)
+            out[k] = _export_node((k,), v, params, plan)
         else:
-            out[k] = _walk(v, plan)
+            out[k] = _walk(v, plan, (k,))
+    if plan.quant_plan is not None:
+        out[PLAN_KEY] = plan_to_array(plan.quant_plan)
     return out
 
 
@@ -188,6 +258,8 @@ def find_exported_linears(tree, prefix: tuple = ()) -> list[tuple]:
                 out.append(prefix)
             return out
         for k, v in tree.items():
+            if k == PLAN_KEY:
+                continue
             out.extend(find_exported_linears(v, prefix + (k,)))
     elif isinstance(tree, (list, tuple)):
         for i, v in enumerate(tree):
@@ -241,6 +313,8 @@ def kernel_route_check(exported: Params, plan: DeployPlan) -> dict | None:
         if chosen is None:
             chosen = (path, ex)
     path, ex = chosen
+    dotted = ".".join(str(p) for p in path)
+    spec = plan.spec_for(dotted)
     w = dof.dequantize_export(ex, jnp.float32,
                               packed=ex["q"].dtype == jnp.uint8)
     x = jax.random.normal(jax.random.PRNGKey(0), (M, w.shape[0]), jnp.float32)
@@ -248,18 +322,19 @@ def kernel_route_check(exported: Params, plan: DeployPlan) -> dict | None:
     y_ref = x @ w
     if "b" in ex:
         y_ref = y_ref + ex["b"]
-    return {"path": ".".join(str(p) for p in path),
-            "layout": str(plan.layout if plan.layout is not None
-                          else plan.qcfg.layout),
+    return {"path": dotted,
+            "layout": (spec.layout if spec is not None
+                       else str(plan.layout if plan.layout is not None
+                                else plan.qcfg.layout)),
             "pallas": bool(plan.use_pallas and reaches_kernel(ex)),
             "max_err": float(jnp.max(jnp.abs(y - y_ref)))}
 
 
-def _effective_node(name: str, node: Params, parent: Params,
+def _effective_node(path: tuple, node: Params, parent: Params,
                     plan: DeployPlan, dtype) -> Params:
     out: Params = {"w": dof.effective_weight(
-        node, plan.qcfg, _stream_log_sa(name, parent),
-        compute_dtype=dtype, bits=plan.bits_for(name))}
+        node, plan.qcfg, _stream_log_sa(path[-1], parent),
+        compute_dtype=dtype, bits=plan.bits_for(".".join(path)))}
     if "b" in node:
         out["b"] = node["b"]
     return out
@@ -272,10 +347,10 @@ def effective_view(params: Params, plan_or_qcfg,
     The oracle for export fidelity: deploy_view(export_for_layers(p)) must
     match effective_view(p) leaf-for-leaf up to float tolerance.
     """
-    plan = _as_plan(plan_or_qcfg)
+    plan = _as_plan(plan_or_qcfg, params=params)
     qcfg = plan.qcfg
 
-    def walk(tree, key=""):
+    def walk(tree, prefix: tuple = ()):
         if isinstance(tree, dict):
             if "w" in tree and "log_s" in tree:      # quantized embedding
                 s = jnp.exp(tree["log_s"])
@@ -286,22 +361,24 @@ def effective_view(params: Params, plan_or_qcfg,
                 if k in STREAM_KEYS:
                     continue
                 if _is_qlinear(v):
-                    out[k] = _effective_node(k, v, tree, plan, dtype)
+                    out[k] = _effective_node(prefix + (k,), v, tree, plan,
+                                             dtype)
                 else:
-                    out[k] = walk(v, k)
+                    out[k] = walk(v, prefix + (k,))
             return out
         if isinstance(tree, (list, tuple)):
-            return type(tree)(walk(v) for v in tree)
+            return type(tree)(walk(v, prefix + (str(i),))
+                              for i, v in enumerate(tree))
         return tree
 
     out = {}
     for k, v in params.items():
         if k in ("layers", "enc_layers", "dec_layers", "tail"):
-            out[k] = jax.vmap(lambda lp: walk(lp))(v)
+            out[k] = jax.vmap(lambda lp: walk(lp, (k,)))(v)
         elif k in STREAM_KEYS:
             continue
         elif _is_qlinear(v):
-            out[k] = _effective_node(k, v, params, plan, dtype)
+            out[k] = _effective_node((k,), v, params, plan, dtype)
         else:
-            out[k] = walk(v)
+            out[k] = walk(v, (k,))
     return out

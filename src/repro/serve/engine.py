@@ -18,7 +18,8 @@ import jax.numpy as jnp
 from ..core.qconfig import QuantConfig
 from ..models import forward, init_cache
 from ..models.config import ModelConfig
-from .deploy import DeployPlan, deploy_view, export_for_layers, make_deploy_plan
+from .deploy import (DeployPlan, deploy_view, export_for_layers,
+                     make_deploy_plan, plan_from_artifact)
 
 
 @dataclasses.dataclass
@@ -45,7 +46,11 @@ class Engine:
     def __init__(self, cfg: ModelConfig, qcfg: QuantConfig, student_params,
                  scfg: ServeConfig | None = None,
                  plan: DeployPlan | None = None):
-        plan = plan or make_deploy_plan(qcfg, arch=cfg.name, family=cfg.family)
+        if plan is None:
+            # resolve the QuantPlan from the student tree so per-tensor bits
+            # and packing come from plan lookups, not bare-name heuristics
+            plan = make_deploy_plan(qcfg, arch=cfg.name, family=cfg.family,
+                                    params=student_params, model_cfg=cfg)
         exported = jax.jit(lambda p: export_for_layers(p, plan))(student_params)
         self._setup(cfg, plan, exported, scfg)
 
@@ -53,7 +58,16 @@ class Engine:
     def from_artifact(cls, cfg: ModelConfig, plan: DeployPlan, exported,
                       scfg: ServeConfig | None = None) -> "Engine":
         """Build the engine from an exported artifact + its deploy plan
-        (no re-export; what launch/serve and the pipeline's serve-smoke use)."""
+        (no re-export; what launch/serve and the pipeline's serve-smoke use).
+
+        If the caller's DeployPlan carries no resolved QuantPlan (e.g. it was
+        rebuilt from a bare QuantConfig), the plan serialized inside the
+        artifact at export time is reconstructed — the artifact is the source
+        of truth for its own per-tensor decisions."""
+        if plan.quant_plan is None:
+            qp = plan_from_artifact(exported)
+            if qp is not None:
+                plan = dataclasses.replace(plan, quant_plan=qp)
         self = cls.__new__(cls)
         self._setup(cfg, plan, exported, scfg)
         return self

@@ -28,8 +28,8 @@ from ..core.mmse import ppq_scale
 from ..core.qconfig import Granularity, QuantConfig
 from ..models import forward, init_model
 from ..models.config import ModelConfig
+from ..core.plan import STREAM_OF, QuantPlan, _is_qlinear
 from ..optim.adam import paper_recipe
-from ..serve.deploy import STREAM_OF, _is_qlinear
 from .steps import make_train_step
 
 Params = dict[str, Any]
@@ -45,16 +45,26 @@ _TAP_TO_STREAM = {
 }
 
 
-def _init_scales_tree(tree: Params, qcfg: QuantConfig) -> Params:
+def _init_scales_tree(tree: Params, qcfg: QuantConfig,
+                      plan: QuantPlan | None = None) -> Params:
     """MMSE-init every qlinear's log_swr (PPQ; APQ for dchw, folding the left
-    scale into the sibling stream).  Handles layer-stacked subtrees via vmap."""
+    scale into the sibling stream).  Handles layer-stacked subtrees via vmap.
+
+    Per-tensor fit bits come from the resolved QuantPlan (path-qualified
+    lookups), so exempted / overridden tensors are fitted at the same grid
+    they export under; without a plan the pre-plan role defaults apply."""
+
+    def bits_at(path: tuple, default: int | None = None) -> int | None:
+        if plan is not None:
+            return plan.bits_for(".".join(path))
+        return default
 
     def embed_init(v: Params) -> Params:
         srow = ppq_scale(v["w"], qcfg.embed_bits, axes=(1,),
                          iters=qcfg.mmse_iters)            # [V, 1]
         return {**v, "log_s": jnp.log(jnp.maximum(srow, 1e-12))}
 
-    def walk(node: Params) -> Params:
+    def walk(node: Params, prefix: tuple) -> Params:
         if not isinstance(node, dict):
             return node
         if "log_s" in node and "w" in node:                # quantized embedding
@@ -66,8 +76,9 @@ def _init_scales_tree(tree: Params, qcfg: QuantConfig) -> Params:
             elif _is_qlinear(v):
                 sname = STREAM_OF.get(k)
                 stream = node.get(sname) if sname else None
+                bits = bits_at(prefix + (k,))
                 if qcfg.granularity is Granularity.DCHW:
-                    newlin, log_swl = dof.apq_init_qlinear(v, qcfg)
+                    newlin, log_swl = dof.apq_init_qlinear(v, qcfg, bits=bits)
                     out[k] = newlin
                     if stream is not None:
                         # S_a = 1/S_wL (Eq. 3); fan-out siblings geo-mean in
@@ -77,26 +88,27 @@ def _init_scales_tree(tree: Params, qcfg: QuantConfig) -> Params:
                 else:
                     # invert Eq. 2: fit S_wR given the (calibrated) S_a tie
                     log_sa = None if stream is None else stream["log_sa"]
-                    out[k] = dof.mmse_init_qlinear(v, qcfg, log_sa_in=log_sa)
+                    out[k] = dof.mmse_init_qlinear(v, qcfg, bits=bits,
+                                                   log_sa_in=log_sa)
             elif isinstance(v, dict):
-                out[k] = walk(v)
+                out[k] = walk(v, prefix + (k,))
         return out
 
     out = dict(tree)
     for k, v in tree.items():
         if k in ("layers", "enc_layers", "dec_layers", "tail"):
-            out[k] = jax.vmap(walk)(v)
+            out[k] = jax.vmap(lambda lp, k=k: walk(lp, (k,)))(v)
         elif isinstance(v, dict):
             if _is_qlinear(v):
                 sname = STREAM_OF.get(k)
                 stream = tree.get(sname) if sname else None
                 log_sa = None if stream is None else stream["log_sa"]
-                bits = (qcfg.embed_bits if k in ("lm_head", "fc")
-                        else qcfg.w_bits)
+                bits = bits_at((k,), qcfg.embed_bits
+                               if k in ("lm_head", "fc") else qcfg.w_bits)
                 out[k] = dof.mmse_init_qlinear(v, qcfg, bits=bits,
                                                log_sa_in=log_sa)
             else:
-                out[k] = walk(v)
+                out[k] = walk(v, (k,))
         else:
             out[k] = v
     return out
@@ -208,11 +220,12 @@ def build_student(key, cfg: ModelConfig, qcfg: QuantConfig,
 
 
 def init_scales(student: Params, cfg: ModelConfig, qcfg: QuantConfig,
-                cle_init: bool = False) -> Params:
+                cle_init: bool = False,
+                plan: QuantPlan | None = None) -> Params:
     """Stage: MMSE/APQ weight-scale init (+ optional CLE) — run AFTER
     calibrate_student so the S_a tie of Eq. 2 is inverted against the
-    calibrated streams."""
-    student = _init_scales_tree(student, qcfg)
+    calibrated streams.  ``plan`` supplies per-tensor fit bits."""
+    student = _init_scales_tree(student, qcfg, plan=plan)
     if cle_init:
         student = cle_init_student(student, cfg, qcfg)
     return student

@@ -106,3 +106,21 @@ def test_scale_gradient_equals_lsq():
     q = jnp.clip(jnp.round(x / s), -7, 7)
     lsq = jnp.sum(jnp.where(jnp.abs(x / s) <= 7, q - x / s, q))
     np.testing.assert_allclose(float(g), float(lsq), rtol=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.dictionaries(st.text(alphabet="abcdef", min_size=1, max_size=6),
+                       st.integers(min_value=1, max_value=10_000),
+                       max_size=12),
+       st.floats(min_value=0.0, max_value=0.5,
+                 allow_nan=False, allow_infinity=False))
+def test_exempt_selection_respects_weight_budget(sizes, frac):
+    """§4 1%-rule invariant: exempt weight-bytes ≤ exempt_frac · total,
+    for ANY layer-size map and budget fraction (incl. empty / zero)."""
+    import dataclasses
+    from repro.core import QuantConfig, select_exempt_layers
+    cfg = dataclasses.replace(QuantConfig(), exempt_frac=frac)
+    ex = select_exempt_layers(sizes, cfg)
+    total = sum(sizes.values())
+    assert ex <= set(sizes)
+    assert sum(sizes[n] for n in ex) <= frac * total + 1e-9

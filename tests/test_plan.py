@@ -1,0 +1,376 @@
+"""QuantPlan: resolution producers, path-glob overrides, JSON/artifact
+round-trip, the wired §4 1%-rule, and the plan-as-API acceptance checks."""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (QuantConfig, deployment_oriented, permissive,
+                        select_exempt_layers)
+from repro.core.plan import (PLAN_KEY, QuantPlan, apply_plan, glob_match,
+                             plan_from_array, plan_to_array, resolve_plan)
+from repro.models import ModelConfig, init_model
+from repro.pipeline import PipelineConfig, run_pipeline
+from repro.pipeline.cli import main as cli_main
+from repro.serve.deploy import (deploy_view, export_for_layers,
+                                make_deploy_plan, plan_from_artifact)
+
+CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                  n_heads=4, n_kv_heads=2, d_ff=64, vocab=64, head_dim=8,
+                  scan_layers=False, remat=False)
+
+
+def _skel(qcfg, cfg=CFG):
+    return jax.eval_shape(lambda k: init_model(k, cfg, qcfg),
+                          jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# §4 1%-rule selection (core.policy) — satellite coverage
+# ---------------------------------------------------------------------------
+
+def test_select_exempt_budget_boundary_inclusive():
+    """A layer whose size lands exactly on the cumulative budget is kept."""
+    cfg = dataclasses.replace(QuantConfig(), exempt_frac=0.4)
+    ex = select_exempt_layers({"a": 10, "b": 30, "c": 60}, cfg)  # budget 40
+    assert ex == {"a", "b"}
+
+
+def test_select_exempt_size_name_tie_break():
+    """Equal sizes break by name, so selection is deterministic."""
+    cfg = dataclasses.replace(QuantConfig(), exempt_frac=0.0101)
+    sizes = {"y": 10, "x": 10, "z": 1000}          # budget ≈ 10.3 → one slot
+    assert select_exempt_layers(sizes, cfg) == {"x"}
+
+
+def test_select_exempt_empty_model():
+    assert select_exempt_layers({}, QuantConfig()) == set()
+
+
+def test_select_exempt_nothing_fits():
+    cfg = dataclasses.replace(QuantConfig(), exempt_frac=0.01)
+    assert select_exempt_layers({"a": 100, "b": 100}, cfg) == set()
+
+
+# ---------------------------------------------------------------------------
+# Resolution: default ladder, roles, streams, the wired exemption rule
+# ---------------------------------------------------------------------------
+
+def test_resolve_paths_roles_and_streams():
+    qcfg = deployment_oriented()
+    plan = resolve_plan(qcfg, _skel(qcfg), model_cfg=CFG)
+    assert "layers.mlp.up" in plan and "lm_head" in plan and "embed" in plan
+    up = plan.spec("layers.mlp.up")
+    assert up.role == "linear" and up.w_bits == 4 and up.stream == "in_stream"
+    assert plan.spec("layers.mlp.down").stream == "act_stream"
+    head = plan.spec("lm_head")
+    assert head.role == "head" and head.w_bits == qcfg.embed_bits
+    assert plan.spec("embed").role == "embed"
+    # stacked tensors carry their full (layer-stacked) shape
+    assert up.shape[0] == CFG.n_layers
+    # smoke-size models have no sub-1% backbone tensor → nothing exempt
+    assert plan.exempt_names == frozenset()
+
+
+def test_one_percent_rule_selects_smallest_until_budget():
+    qcfg = dataclasses.replace(deployment_oriented(), exempt_frac=0.2)
+    plan = resolve_plan(qcfg, _skel(qcfg), model_cfg=CFG)
+    ex = plan.exempt_names
+    assert ex, "a 20% budget must exempt the smallest backbone tensors"
+    pool = {p: s.size for p, s in plan if s.role in ("linear", "conv",
+                                                     "router")}
+    picked = sum(pool[p] for p in ex)
+    assert picked <= 0.2 * sum(pool.values())
+    for p in ex:
+        spec = plan.spec(p)
+        assert spec.w_bits == qcfg.exempt_bits and spec.origin == "exempt-1%"
+    # everything exempt is smaller than everything not exempt (smallest-first)
+    if len(ex) < len(pool):
+        assert max(pool[p] for p in ex) <= min(
+            v for p, v in pool.items() if p not in ex)
+
+
+def test_glob_match_grammar():
+    assert glob_match("layers.*.down", "layers.mlp.down")
+    assert not glob_match("layers.*.down", "layers.mlp.shared_down")
+    assert glob_match("down", "layers.mlp.down")        # bare-name compat
+    assert not glob_match("down", "layers.mlp.shared_down")
+    assert glob_match("convs.*", "convs.0")
+
+
+def test_bits_and_layout_overrides_by_path_glob():
+    qcfg = dataclasses.replace(
+        deployment_oriented(),
+        layout_overrides=(("layers.*.down", "group:16"),),
+        bits_overrides=(("layers.attn.w[qk]", 8),))
+    plan = resolve_plan(qcfg, _skel(qcfg), model_cfg=CFG)
+    assert plan.spec("layers.mlp.down").layout == "group:16"
+    assert plan.spec("layers.mlp.up").layout == "layerwise"  # default (lw)
+    for p in ("layers.attn.wq", "layers.attn.wk"):
+        assert plan.spec(p).w_bits == 8 and plan.spec(p).origin == "override"
+    assert plan.spec("layers.attn.wv").w_bits == 4
+
+
+def test_group_fallback_warns_once_and_records_effective_layout():
+    qcfg = dataclasses.replace(deployment_oriented(),
+                               w_layout="group:48")    # 48 ∤ 32/64
+    with pytest.warns(UserWarning, match="single group"):
+        plan = resolve_plan(qcfg, _skel(qcfg), model_cfg=CFG)
+    up = plan.spec("layers.mlp.up")                    # d_in = 32
+    assert up.layout == "group:32" and up.layout_fallback
+    assert "!" in plan.describe()                      # surfaced in the table
+
+
+def test_sensitivity_producer_hook():
+    def producer(specs, ctx):
+        return {p: (dataclasses.replace(s, w_bits=2, origin="sens")
+                    if p == "layers.mlp.down" else s)
+                for p, s in specs.items()}
+
+    qcfg = deployment_oriented()
+    plan = resolve_plan(qcfg, _skel(qcfg), model_cfg=CFG,
+                        producers=(producer,))
+    assert plan.spec("layers.mlp.down").w_bits == 2
+    assert plan.spec("layers.mlp.down").origin == "sens"
+    assert plan.spec("layers.mlp.up").w_bits == 4
+
+
+def test_plan_json_roundtrip():
+    qcfg = dataclasses.replace(deployment_oriented(), exempt_frac=0.2,
+                               w_layout="group:16")
+    plan = resolve_plan(qcfg, _skel(qcfg), model_cfg=CFG)
+    again = QuantPlan.from_json(plan.to_json())
+    assert again == plan
+    assert plan_from_array(plan_to_array(plan)) == plan
+
+
+# ---------------------------------------------------------------------------
+# apply_plan: path-glob layouts land in the student's log_swr shapes,
+# and the export round-trip stays bit-exact under the overridden layout
+# ---------------------------------------------------------------------------
+
+def test_apply_plan_realizes_glob_layout_and_stays_bit_exact():
+    qcfg = dataclasses.replace(
+        permissive(), layout_overrides=(("layers.*.down", "group:16"),))
+    student = init_model(jax.random.PRNGKey(0), CFG, qcfg)
+    # bare-name init can't see the path glob: still at the channel default
+    assert student["layers"]["mlp"]["down"]["log_swr"].shape == (2, 32)
+    plan = resolve_plan(qcfg, student, model_cfg=CFG)
+    student = apply_plan(student, plan)
+    down = student["layers"]["mlp"]["down"]
+    assert down["log_swr"].shape == (2, 64 // 16, 32)  # [L, in/g, out]
+    # untouched tensors keep their shapes (no gratuitous re-init)
+    assert student["layers"]["mlp"]["up"]["log_swr"].shape == (2, 64)
+    dplan = make_deploy_plan(qcfg, quant_plan=plan)
+    ex = export_for_layers(student, dplan)
+    from repro.core import dof
+    log_sa = student["layers"]["mlp"]["act_stream"]["log_sa"]
+    deq = dof.dequantize_export(ex["layers"]["mlp"]["down"], jnp.float32)
+    w_eff = dof.effective_weight(down, qcfg, log_sa, jnp.float32)
+    np.testing.assert_array_equal(np.asarray(deq), np.asarray(w_eff))
+
+
+# ---------------------------------------------------------------------------
+# Artifact embedding + Engine reconstruction + legacy shim
+# ---------------------------------------------------------------------------
+
+def test_artifact_embeds_plan_and_engine_reconstructs():
+    from repro.serve.engine import Engine, Request, ServeConfig
+    qcfg = permissive()
+    p = init_model(jax.random.PRNGKey(0), CFG, qcfg)
+    ex = export_for_layers(p, qcfg)                    # bare qcfg: resolves
+    assert PLAN_KEY in ex
+    qp = plan_from_artifact(ex)
+    assert qp is not None and qp.bits_for("layers.mlp.up") == 4
+    assert qp == resolve_plan(qcfg, p)
+    # a DeployPlan rebuilt from the bare config has no per-tensor plan;
+    # from_artifact must reconstruct it from the embedded JSON
+    bare = make_deploy_plan(qcfg, arch=CFG.name, family=CFG.family)
+    assert bare.quant_plan is None
+    eng = Engine.from_artifact(CFG, bare, ex, ServeConfig(slots=2, max_len=32))
+    assert eng.plan.quant_plan == qp
+    outs = eng.generate([Request(prompt=[1, 2], max_new_tokens=3)])
+    assert len(outs[0]) == 3
+    # deploy_view with a bare qcfg picks the embedded plan up (no warnings)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        dv = deploy_view(ex, qcfg)
+    assert PLAN_KEY not in dv
+
+
+def test_legacy_artifact_without_plan_shim_and_dtype_unpack():
+    qcfg = permissive()
+    p = init_model(jax.random.PRNGKey(0), CFG, qcfg)
+    ex = export_for_layers(p, qcfg)
+    legacy = {k: v for k, v in ex.items() if k != PLAN_KEY}
+    bare = make_deploy_plan(qcfg)
+    # bits lookups without a resolved plan fall back to the deprecated
+    # bare-name heuristic — loudly
+    with pytest.warns(DeprecationWarning, match="legacy bare-name"):
+        assert bare.bits_for("lm_head") == qcfg.exempt_bits
+    with pytest.warns(DeprecationWarning):
+        assert bare.bits_for("layers.mlp.up") == qcfg.w_bits
+    # deploy_view, by contrast, never needs the shim: whether q is packed
+    # is read off each leaf's dtype (uint8 ⇔ nibbles), so even legacy
+    # artifacts with nonstandard exemptions dequantize correctly
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        dv = deploy_view(legacy, bare)
+    assert dv["layers"]["mlp"]["up"]["w"].shape[-2:] == (32, 64)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: mixed W4/W8 smoke pipeline whose exemptions come from the
+# 1%-rule producer ≡ the same set pinned explicitly (the old hardcoded way)
+# ---------------------------------------------------------------------------
+
+def _strip(metrics: dict) -> dict:
+    # "exempt" names the producer's selection (differs by construction);
+    # artifact_bytes includes the embedded plan JSON, whose length differs
+    # with the origin strings — the quantized payload is compared separately
+    return {k: v for k, v in metrics.items()
+            if k not in ("exempt", "artifact_bytes")}
+
+
+def _payload_bytes(artifact: dict) -> int:
+    return sum(leaf.size * leaf.dtype.itemsize
+               for k, v in artifact.items() if k != PLAN_KEY
+               for leaf in jax.tree.leaves(v))
+
+
+def test_mixed_w4_w8_one_percent_rule_matches_pinned_baseline():
+    common = dict(arch="paper_cnn", mode="w4a8", steps=2, calib_samples=256,
+                  log_every=1)
+    # rule-driven: 5% of the conv backbone (432+4608+18432) covers convs.0
+    rule = run_pipeline(PipelineConfig(exempt_frac=0.05, **common))
+    assert rule.plan.quant_plan.exempt_names == frozenset({"convs.0"})
+    assert rule.plan.quant_plan.bits_for("convs.0") == 8
+    # pinned: the selected set spelled out explicitly, rule disabled
+    pinned = run_pipeline(PipelineConfig(
+        exempt_frac=0.0, bits_overrides=(("convs.0", 8),), **common))
+    assert pinned.plan.quant_plan.exempt_names == frozenset()
+    ev_rule = _strip(rule.metrics["evaluate"])
+    ev_pinned = _strip(pinned.metrics["evaluate"])
+    assert ev_rule == ev_pinned                       # identical computation
+    assert _payload_bytes(rule.artifact) == _payload_bytes(pinned.artifact)
+    # genuinely mixed-precision artifact: conv0 int8, conv1/2 int4-packed
+    assert rule.artifact["convs"][0]["q"].dtype == jnp.int8
+    assert rule.artifact["convs"][1]["q"].dtype == jnp.uint8
+    assert ev_rule["export_parity_max_err"] < 1e-4
+    # the training forward saw the same 8-bit conv0 the export burned in
+    assert rule.metrics["finetune"]["steps"] == 2
+
+
+def test_override_matching_nothing_or_a_conv_warns():
+    qcfg = dataclasses.replace(
+        deployment_oriented(), bits_overrides=(("no.such.tensor", 8),))
+    with pytest.warns(UserWarning, match="matched no plan tensor"):
+        resolve_plan(qcfg, _skel(qcfg), model_cfg=CFG)
+    from repro.models.cnn import CNNConfig, init_cnn
+    ccfg = CNNConfig(name="c")
+    qcfg = dataclasses.replace(
+        deployment_oriented(), layout_overrides=(("convs.*", "channel"),))
+    skel = jax.eval_shape(lambda k: init_cnn(k, ccfg, qcfg),
+                          jax.random.PRNGKey(0))
+    with pytest.warns(UserWarning, match="no QLayout'd log_swr"):
+        resolve_plan(qcfg, skel, model_cfg=ccfg)
+
+
+def test_override_replacing_fallen_back_layout_retires_warning():
+    """group:48 ∤ d_in falls back, but an override that fixes the layout must
+    also retire the fallback record from the resolution warning."""
+    qcfg = dataclasses.replace(
+        deployment_oriented(), w_layout="group:48",
+        layout_overrides=(("*", "group:16"),))       # 16 divides every d_in
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        plan = resolve_plan(qcfg, _skel(qcfg), model_cfg=CFG)
+    assert not any("single group" in str(w.message) for w in caught), \
+        [str(w.message) for w in caught]
+    assert plan.spec("layers.mlp.up").layout == "group:16"
+    assert not plan.spec("layers.mlp.up").layout_fallback
+
+
+def test_cli_quantize_bad_override_value(capsys):
+    rc = cli_main(["quantize", "--config", "paper_cnn",
+                   "--bits-override", "fc=four"])
+    assert rc == 2
+    assert "error" in capsys.readouterr().err
+
+
+def test_bits_override_clears_exempt_flag():
+    """An explicit override supersedes the 1%-rule: exempt flag (and all
+    reporting built on it) must not claim the rule still owns the tensor."""
+    qcfg = dataclasses.replace(deployment_oriented(), exempt_frac=0.2,
+                               bits_overrides=(("layers.attn.wk", 4),))
+    plan = resolve_plan(qcfg, _skel(qcfg), model_cfg=CFG)
+    wk = plan.spec("layers.attn.wk")           # smallest → 1%-selected …
+    assert wk.w_bits == 4 and wk.origin == "override" and not wk.exempt
+    assert "layers.attn.wk" not in plan.exempt_names
+
+
+def test_init_qlinear_from_spec_row():
+    """A resolved TensorSpec drives init directly: layout shapes log_swr and
+    bits set the fill grid (the plan-row consumer contract of init_qlinear)."""
+    from repro.core import dof
+    qcfg = deployment_oriented()
+    plan = resolve_plan(qcfg, _skel(qcfg), model_cfg=CFG)
+    spec = dataclasses.replace(plan.spec("layers.mlp.down"),
+                               layout="group:16", w_bits=8)
+    p = dof.init_qlinear(jax.random.PRNGKey(0), 64, 32, qcfg, spec=spec)
+    assert p["log_swr"].shape == (64 // 16, 32)
+    assert np.isclose(float(p["log_swr"][0, 0]),
+                      np.log(64 ** -0.5 / (2 ** 7 - 1)))
+
+
+def test_transformer_adapter_warns_on_offgrid_backbone_bits():
+    """Until plan bits thread through the transformer forward, a plan that
+    moves a backbone linear off qcfg.w_bits must warn (ROADMAP item)."""
+    from repro.pipeline.adapters import get_adapter
+    pcfg = PipelineConfig(arch="qwen3_8b", steps=0,
+                          bits_overrides=(("layers.mlp.down", 8),))
+    with pytest.warns(UserWarning, match="non-default bits"):
+        get_adapter(pcfg)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_plan_table(capsys):
+    rc = cli_main(["plan", "--config", "paper_cnn", "--exempt-frac", "0.05"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "convs.0" in out and "fc" in out and "exempt-1%" in out
+
+
+def test_cli_plan_json(capsys):
+    rc = cli_main(["plan", "--config", "qwen3_8b", "--json"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    start = out.index("{")
+    qp = QuantPlan.from_json(out[start:out.rindex("}") + 1])
+    assert "layers.mlp.up" in qp
+
+
+def test_cli_plan_rejects_missing_config(capsys):
+    assert cli_main(["plan"]) == 2
+    assert "--config" in capsys.readouterr().err
+
+
+def test_cli_bad_override_spec(capsys):
+    rc = cli_main(["quantize", "--config", "paper_cnn",
+                   "--bits-override", "convs.0"])
+    assert rc == 2
+    assert "GLOB=VALUE" in capsys.readouterr().err
+
+
+def test_cli_plan_bad_override_value(capsys):
+    """Non-integer bits must hit the 'error:' path, not a raw traceback."""
+    rc = cli_main(["plan", "--config", "paper_cnn",
+                   "--bits-override", "fc=four"])
+    assert rc == 2
+    assert "error" in capsys.readouterr().err
