@@ -127,8 +127,23 @@ class QuantPlan:
 
     The single API between config, init, finetune, export and serving:
     consumers look decisions up here instead of re-deriving them from
-    ``(qcfg, name, dtype)`` forks.  Hashable (entries are a tuple) so it can
-    ride inside the frozen :class:`serve.deploy.DeployPlan`.
+    ``(qcfg, name, dtype)`` forks.  The five consumers and what they read:
+
+    - **init** (``train.qft_trainer._init_scales_tree``, CNN adapter):
+      per-path fit bits for the MMSE/APQ scale solve;
+    - **finetune forward** (``models.forward(plan=)``,
+      ``models.cnn.forward_cnn(plan=)``): per-path fake-quant bits via
+      :class:`PlanView`, so the training grid IS the deployment grid;
+    - **export** (``serve.deploy.export_for_layers`` / ``export_model``):
+      bits + packing per path, and embeds the serialized plan in the
+      artifact;
+    - **deploy/effective views**: the same lookups, giving the bit-exact
+      train≡export parity oracle;
+    - **serving** (``Engine.from_artifact``): reconstructs the plan from the
+      artifact leaf and routes kernels by the recorded layout.
+
+    Hashable (entries are a tuple) so it can ride inside the frozen
+    :class:`serve.deploy.DeployPlan` and be captured by jit closures.
     """
     entries: tuple = ()                # ((path, TensorSpec), ...)
     default_bits: int = 4              # fallback for paths outside the plan
@@ -219,6 +234,65 @@ class QuantPlan:
                         if any(s.layout_fallback for _, s in self.entries)
                         else ""))
         return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# PlanView: the training forward's scoped lookup handle
+# ---------------------------------------------------------------------------
+
+class PlanView:
+    """A :class:`QuantPlan` scoped to a path prefix — the lookup handle the
+    plan-aware training forward threads through its call tree.
+
+    The transformer forward is compositional (``models.forward`` → layer
+    block → attention/MLP/MoE/SSM module → ``dof.qlinear``), so each level
+    narrows the view with :meth:`child` instead of threading dotted path
+    strings.  Lookups are plain-Python dict reads against the resolved plan
+    and return static ints, so they happen **at trace time** — nothing
+    plan-related enters the jitted graph, and a vmap/scan-stacked subtree
+    (``layers``, ``enc_layers``, …) keeps its single-path/single-spec
+    semantics: one ``PlanView("layers")`` covers every stacked layer.
+
+    A view over ``plan=None`` is inert: :meth:`bits` returns the caller's
+    ``default`` and :meth:`child` returns ``self``, reproducing the pre-plan
+    role-ladder forward exactly (teacher forwards, legacy callers).
+    """
+    __slots__ = ("plan", "prefix")
+
+    def __init__(self, plan: "QuantPlan | None", prefix: tuple = ()):
+        self.plan = plan
+        self.prefix = prefix
+
+    def child(self, *names: str) -> "PlanView":
+        """Narrow the view to a subtree, e.g. ``pv.child("layers", "mlp")``."""
+        if self.plan is None:
+            return self
+        return PlanView(self.plan, self.prefix + names)
+
+    def bits(self, name: str, default: int | None = None) -> int | None:
+        """Static fake-quant bits for ``<prefix>.<name>``.
+
+        With a plan this is exactly ``plan.bits_for(path)`` — the same
+        lookup ``serve.deploy.export_for_layers`` / ``effective_view`` do,
+        which is what makes the training grid the deployment grid (the
+        train≡export invariant, DESIGN.md).  Without a plan it returns
+        ``default`` (``None`` → ``qcfg.w_bits`` inside ``dof.qlinear``).
+        """
+        if self.plan is None:
+            return default
+        return self.plan.bits_for(".".join(self.prefix + (name,)))
+
+
+def plan_view(plan) -> PlanView:
+    """Normalize ``QuantPlan | PlanView | None`` to a :class:`PlanView`.
+
+    Every plan-aware forward entry point calls this on its ``plan`` argument,
+    so callers may hand over a resolved plan, an already-scoped view, or
+    nothing at all.
+    """
+    if isinstance(plan, PlanView):
+        return plan
+    return PlanView(plan)
 
 
 # ---------------------------------------------------------------------------
@@ -444,8 +518,15 @@ def resolve_plan(qcfg: QuantConfig, params, model_cfg=None,
                  producers: tuple = ()) -> QuantPlan:
     """(QuantConfig, student params tree) → QuantPlan, via the producer chain.
 
-    ``params`` may be a real tree or ``jax.eval_shape`` output.  Extra
-    ``producers`` run after the built-in chain (sensitivity hooks etc.).
+    ``params`` may be a real tree or ``jax.eval_shape`` output — only shapes
+    are read, so resolving a 100B+ registry entry costs one abstract trace.
+    ``model_cfg`` supplies family knobs some producers read (MoE router
+    bits).  Extra ``producers`` run after the built-in chain
+    (default ladder → §4 1%-rule → path-glob overrides) and may re-assign
+    bits/layouts freely — the sensitivity-guided mixed-precision hook
+    (:func:`make_sensitivity_producer`).  Resolve **once** per run and hand
+    the same object to init, the trainer, export, and serving; resolving
+    twice from different skeletons is how grids silently diverge.
     """
     ctx = PlanContext(qcfg=qcfg, model_cfg=model_cfg)
     specs: dict[str, TensorSpec] = {}

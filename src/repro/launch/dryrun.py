@@ -35,6 +35,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from ..configs import SHAPES, get_config, input_specs, skip_reason, ARCH_IDS  # noqa: E402
 from ..core import deployment_oriented  # noqa: E402
+from ..core.plan import resolve_plan  # noqa: E402
 from ..models import init_model, init_cache, set_runtime  # noqa: E402
 from ..optim.adam import paper_recipe  # noqa: E402
 from ..serve.deploy import (export_for_layers, deploy_view,  # noqa: E402
@@ -112,22 +113,28 @@ def build_cell(arch: str, shape: str, mesh, pol: ShardingPolicy,
     for o in opts:
         if o.startswith("mb"):
             microbatches = int(o[2:])
-    if "ep" in opts and cfg.moe is not None:
-        from ..sharding.ep import make_ep_moe
-        set_runtime(moe_fn=make_ep_moe(mesh, cfg, qcfg, dp_axes=pol.dp,
-                                       tp_axis=pol.tp))
-    else:
-        set_runtime(moe_fn=None)
     sp = SHAPES[shape]
     batch = input_specs(arch, shape, cfg)
     key = jax.random.PRNGKey(0)
+    # abstract student skeleton + resolved QuantPlan, shared by every cell
+    # kind.  Resolved EAGERLY (outside any trace): plan lookups are then
+    # static Python ints in the lowered graphs, and the train cells compile
+    # the exact grid the inference cells deploy.
+    student = _struct(init_model, key, cfg=cfg, qcfg=qcfg)
+    qplan = resolve_plan(qcfg, student, model_cfg=cfg)
+    if "ep" in opts and cfg.moe is not None:
+        from ..sharding.ep import make_ep_moe
+        set_runtime(moe_fn=make_ep_moe(mesh, cfg, qcfg, dp_axes=pol.dp,
+                                       tp_axis=pol.tp, plan=qplan))
+    else:
+        set_runtime(moe_fn=None)
 
     if sp.kind == "train":
         opt = paper_recipe(
             steps_per_epoch=500,
             state_dtype=jnp.bfloat16 if arch in _BF16_OPT else jnp.float32)
-        step = make_train_step(cfg, qcfg, opt, microbatches=microbatches)
-        student = _struct(init_model, key, cfg=cfg, qcfg=qcfg)
+        step = make_train_step(cfg, qcfg, opt, microbatches=microbatches,
+                               plan=qplan)
         teacher = _cast_tree(_struct(init_model, key, cfg=cfg, qcfg=None),
                              jnp.bfloat16)
         opt_state = _struct(opt.init, student)
@@ -142,13 +149,12 @@ def build_cell(arch: str, shape: str, mesh, pol: ShardingPolicy,
                      donate_argnums=(0, 1))
         return fn, (student, opt_state, teacher, batch), cfg
 
-    # inference cells run the DEPLOYED artifact (int4-packed weights).
-    # Resolve the DeployPlan (incl. the per-tensor QuantPlan) EAGERLY from
-    # the student shape tree: inside the traced step the embedded plan leaf
-    # is abstract and could not be decoded.
-    student = _struct(init_model, key, cfg=cfg, qcfg=qcfg)
+    # inference cells run the DEPLOYED artifact (int4-packed weights) under
+    # the same resolved plan the train cells fake-quant against.  The
+    # DeployPlan is built eagerly: inside the traced step the embedded plan
+    # leaf is abstract and could not be decoded.
     dplan = make_deploy_plan(qcfg, arch=arch, family=cfg.family,
-                             params=student, model_cfg=cfg)
+                             quant_plan=qplan)
     exported = _struct(export_for_layers, student, plan_or_qcfg=dplan)
     ex_sh = params_shardings(exported, cfg, mesh, pol)
 

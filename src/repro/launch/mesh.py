@@ -7,8 +7,6 @@ get the plain (auto-sharding) equivalents.
 """
 from __future__ import annotations
 
-import contextlib
-
 import jax
 
 
@@ -21,12 +19,18 @@ def _make_mesh(shape, axes):
 
 
 def mesh_context(mesh):
-    """``with mesh_context(mesh):`` — jax.set_mesh where available, else a
-    no-op (pre-set_mesh jax resolves NamedShardings against the mesh they
-    were built with)."""
+    """``with mesh_context(mesh):`` — an ambient mesh across jax versions.
+
+    ``jax.set_mesh`` where available; on older jax (≤0.4.x) fall back to
+    entering the ``Mesh`` itself as a context manager, which installs the
+    resource env that ``with_sharding_constraint(x, PartitionSpec(...))``
+    needs at trace time.  (The earlier nullcontext fallback left
+    ``models.transformer.constrain_act`` without an ambient mesh on jax
+    0.4.37 — every dryrun prefill/decode cell failed with "requires a
+    non-empty mesh" while NamedSharding-only paths happened to work.)"""
     set_mesh = getattr(jax, "set_mesh", None)
     if set_mesh is None:
-        return contextlib.nullcontext()
+        return mesh                        # Mesh.__enter__ sets the env
     return set_mesh(mesh)
 
 

@@ -22,6 +22,7 @@ from ..core import deployment_oriented, permissive
 from ..data.calib import CalibConfig, CalibDataset
 from ..models import init_model, set_runtime
 from ..pipeline import PipelineConfig, run_pipeline
+from ..pipeline.adapters import resolve_quant_plan
 from ..sharding.partition import (ShardingPolicy, opt_state_shardings,
                                   params_shardings)
 from ..train.checkpoint import CheckpointManager
@@ -65,8 +66,11 @@ def main() -> None:
     data = CalibDataset(CalibConfig(n_samples=8192, seq_len=512,
                                     batch_size=16, vocab=cfg.vocab))
     teacher = init_model(jax.random.PRNGKey(0), cfg, None)
+    # one resolved plan for init + finetune forward + (later) export: the
+    # production path must train on the grid the artifact ships on
+    qplan = resolve_quant_plan(cfg, qcfg)
     trainer = QFTTrainer(cfg, qcfg, teacher, QFTConfig(cle_init=args.cle),
-                         steps_per_epoch=data.steps_per_epoch)
+                         steps_per_epoch=data.steps_per_epoch, plan=qplan)
     calib = [{k: jnp.asarray(v) for k, v in next(iter(data)).items()}
              for _ in range(4)]
     student = trainer.prepare_student(jax.random.PRNGKey(1), calib)
@@ -84,7 +88,7 @@ def main() -> None:
         rep = NamedSharding(mesh, P())
 
         def build_step(mesh_):
-            raw = make_train_step(cfg, qcfg, opt)
+            raw = make_train_step(cfg, qcfg, opt, plan=qplan)
             jitted = jax.jit(raw, in_shardings=(s_sh, o_sh, t_sh, None),
                              out_shardings=(s_sh, o_sh,
                                             {"loss": rep, "grad_norm": rep}),

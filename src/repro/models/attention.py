@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core import dof
+from ..core.plan import plan_view
 from ..core.qconfig import QuantConfig
 from .config import ModelConfig
 from .layers import apply_mrope, apply_rope, rmsnorm, init_rmsnorm
@@ -80,15 +81,24 @@ def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool,
 def attention(x: jax.Array, p: Params, cfg: ModelConfig,
               qcfg: QuantConfig | None, positions: jax.Array,
               cache: Params | None = None, taps: dict | None = None,
-              prefix: str = "") -> tuple[jax.Array, Params | None]:
-    """Returns (out, updated layer cache).  cache leaves: k/v [B, Smax, Hkv, hd]."""
+              prefix: str = "", plan=None) -> tuple[jax.Array, Params | None]:
+    """Returns (out, updated layer cache).  cache leaves: k/v [B, Smax, Hkv, hd].
+
+    ``plan``: QuantPlan/PlanView scoped to this module's path
+    (``layers.attn``, ``dec_layers.attn``, …) — per-projection fake-quant
+    bits come from the resolved plan so training and export share one grid.
+    """
     B, Sq, _ = x.shape
     hd = cfg.head_dim
     H, Hkv = cfg.n_heads_padded, cfg.n_kv_heads_padded
+    pv = plan_view(plan)
     ins = p.get("in_stream")
-    q = dof.qlinear(x, p["wq"], qcfg, stream=ins).reshape(B, Sq, H, hd)
-    k = dof.qlinear(x, p["wk"], qcfg, stream=ins).reshape(B, Sq, Hkv, hd)
-    v = dof.qlinear(x, p["wv"], qcfg, stream=ins).reshape(B, Sq, Hkv, hd)
+    q = dof.qlinear(x, p["wq"], qcfg, stream=ins,
+                    bits=pv.bits("wq")).reshape(B, Sq, H, hd)
+    k = dof.qlinear(x, p["wk"], qcfg, stream=ins,
+                    bits=pv.bits("wk")).reshape(B, Sq, Hkv, hd)
+    v = dof.qlinear(x, p["wv"], qcfg, stream=ins,
+                    bits=pv.bits("wv")).reshape(B, Sq, Hkv, hd)
     if cfg.qk_norm:
         q, k = rmsnorm(q, p["q_norm"]), rmsnorm(k, p["k_norm"])
     if cfg.mrope_sections:
@@ -113,7 +123,8 @@ def attention(x: jax.Array, p: Params, cfg: ModelConfig,
     if taps is not None:
         from .transformer import _tap
         _tap(taps, prefix + ".pre_o", out)
-    out = dof.qlinear(out, p["wo"], qcfg, stream=p.get("out_stream"))
+    out = dof.qlinear(out, p["wo"], qcfg, stream=p.get("out_stream"),
+                      bits=pv.bits("wo"))
     return out, new_cache
 
 
@@ -157,18 +168,25 @@ def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, n_layers: int,
 
 def mla_attention(x: jax.Array, p: Params, cfg: ModelConfig,
                   qcfg: QuantConfig | None, positions: jax.Array,
-                  cache: Params | None = None) -> tuple[jax.Array, Params | None]:
+                  cache: Params | None = None,
+                  plan=None) -> tuple[jax.Array, Params | None]:
+    """MLA forward; ``plan`` as in :func:`attention` (scoped to
+    ``layers.attn``), covering the absorbed-decode effective weights too."""
     m = cfg.mla
     B, Sq, _ = x.shape
     H = cfg.n_heads_padded
+    pv = plan_view(plan)
     ins = p.get("in_stream")
-    ql = rmsnorm(dof.qlinear(x, p["q_down"], qcfg, stream=ins), p["q_norm"])
-    q = dof.qlinear(ql, p["q_up"], qcfg, stream=p.get("q_stream"))
+    ql = rmsnorm(dof.qlinear(x, p["q_down"], qcfg, stream=ins,
+                             bits=pv.bits("q_down")), p["q_norm"])
+    q = dof.qlinear(ql, p["q_up"], qcfg, stream=p.get("q_stream"),
+                    bits=pv.bits("q_up"))
     q = q.reshape(B, Sq, H, m.d_nope + m.d_rope)
     q_nope, q_rope = q[..., : m.d_nope], q[..., m.d_nope:]
     q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
 
-    kv = dof.qlinear(x, p["kv_down"], qcfg, stream=ins)
+    kv = dof.qlinear(x, p["kv_down"], qcfg, stream=ins,
+                     bits=pv.bits("kv_down"))
     ckv, kr = kv[..., : m.kv_lora], kv[..., m.kv_lora:]
     ckv = rmsnorm(ckv, p["kv_norm"])
     kr = apply_rope(kr[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
@@ -192,7 +210,8 @@ def mla_attention(x: jax.Array, p: Params, cfg: ModelConfig,
         # compressed latent space; k_up/v_up folded into q / output path.
         k_up_w = dof.effective_weight(p["k_up"], qcfg,
                                       None if qcfg is None else p["kv_stream"]["log_sa"],
-                                      compute_dtype=x.dtype)
+                                      compute_dtype=x.dtype,
+                                      bits=pv.bits("k_up"))
         k_up_w = k_up_w.reshape(m.kv_lora, H, m.d_nope)
         q_c = jnp.einsum("bqhn,chn->bqhc", q_nope, k_up_w)       # [B,Sq,H,kv_lora]
         logits = (jnp.einsum("bqhc,bsc->bhqs", q_c, ckv_all,
@@ -200,8 +219,8 @@ def mla_attention(x: jax.Array, p: Params, cfg: ModelConfig,
                   + jnp.einsum("bqhr,bsr->bhqs", q_rope, kr_all,
                                preferred_element_type=jnp.float32)) * scale
     else:
-        k_nope = dof.qlinear(ckv_all, p["k_up"], qcfg,
-                             stream=p.get("kv_stream")).reshape(B, Skv, H, m.d_nope)
+        k_nope = dof.qlinear(ckv_all, p["k_up"], qcfg, stream=p.get("kv_stream"),
+                             bits=pv.bits("k_up")).reshape(B, Skv, H, m.d_nope)
         logits = (jnp.einsum("bqhn,bshn->bhqs", q_nope, k_nope,
                              preferred_element_type=jnp.float32)
                   + jnp.einsum("bqhr,bsr->bhqs", q_rope, kr_all,
@@ -219,13 +238,15 @@ def mla_attention(x: jax.Array, p: Params, cfg: ModelConfig,
         ctx_c = jnp.einsum("bhqs,bsc->bqhc", probs, ckv_all)     # latent context
         v_up_w = dof.effective_weight(p["v_up"], qcfg,
                                       None if qcfg is None else p["kv_stream"]["log_sa"],
-                                      compute_dtype=x.dtype)
+                                      compute_dtype=x.dtype,
+                                      bits=pv.bits("v_up"))
         v_up_w = v_up_w.reshape(m.kv_lora, H, m.d_v)
         ctx = jnp.einsum("bqhc,chv->bqhv", ctx_c, v_up_w)
     else:
-        v = dof.qlinear(ckv_all, p["v_up"], qcfg,
-                        stream=p.get("kv_stream")).reshape(B, Skv, H, m.d_v)
+        v = dof.qlinear(ckv_all, p["v_up"], qcfg, stream=p.get("kv_stream"),
+                        bits=pv.bits("v_up")).reshape(B, Skv, H, m.d_v)
         ctx = jnp.einsum("bhqs,bshv->bqhv", probs, v)
     ctx = ctx.reshape(B, Sq, H * m.d_v)
-    out = dof.qlinear(ctx, p["wo"], qcfg, stream=p.get("out_stream"))
+    out = dof.qlinear(ctx, p["wo"], qcfg, stream=p.get("out_stream"),
+                      bits=pv.bits("wo"))
     return out, new_cache

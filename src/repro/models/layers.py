@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core import dof
+from ..core.plan import plan_view
 from ..core.qconfig import QuantConfig
 
 Params = dict[str, Any]
@@ -93,19 +94,26 @@ def init_mlp(key: jax.Array, d: int, ff: int, qcfg: QuantConfig | None,
 
 
 def mlp(x: jax.Array, p: Params, qcfg: QuantConfig | None,
-        mlp_type: str, taps: dict | None = None, prefix: str = "") -> jax.Array:
+        mlp_type: str, taps: dict | None = None, prefix: str = "",
+        plan=None) -> jax.Array:
+    """Dense MLP forward.  ``plan`` (QuantPlan/PlanView scoped to this
+    module's path, e.g. ``layers.mlp``) supplies per-path fake-quant bits so
+    the training grid matches the export grid; without it the default
+    ``qcfg.w_bits`` applies."""
+    pv = plan_view(plan)
     ins = p.get("in_stream")
     acts = p.get("act_stream")
-    up = dof.qlinear(x, p["up"], qcfg, stream=ins)
+    up = dof.qlinear(x, p["up"], qcfg, stream=ins, bits=pv.bits("up"))
     if mlp_type == "swiglu":
-        gate = dof.qlinear(x, p["gate"], qcfg, stream=ins)
+        gate = dof.qlinear(x, p["gate"], qcfg, stream=ins,
+                           bits=pv.bits("gate"))
         h = jax.nn.silu(gate) * up
     else:
         h = jax.nn.gelu(up)
     if taps is not None:
         from .transformer import _tap
         _tap(taps, prefix + ".act", h)
-    return dof.qlinear(h, p["down"], qcfg, stream=acts)
+    return dof.qlinear(h, p["down"], qcfg, stream=acts, bits=pv.bits("down"))
 
 
 # ----------------------------- embeddings -------------------------------

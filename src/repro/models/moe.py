@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core import dof
+from ..core.plan import plan_view
 from ..core.qconfig import QuantConfig
 from .config import ModelConfig
 
@@ -56,10 +57,10 @@ def init_moe(key: jax.Array, cfg: ModelConfig, qcfg: QuantConfig | None) -> Para
 
 
 def _router_probs(x: jax.Array, p: Params, cfg: ModelConfig,
-                  qcfg: QuantConfig | None) -> jax.Array:
+                  qcfg: QuantConfig | None, plan=None) -> jax.Array:
     e = cfg.moe
     logits = dof.qlinear(x, p["router"], qcfg, stream=p.get("in_stream"),
-                         bits=e.router_bits)
+                         bits=plan_view(plan).bits("router", e.router_bits))
     logits = logits.astype(jnp.float32)
     if e.n_experts_padded != e.n_experts:          # mask padding experts
         neg = jnp.full((e.n_experts_padded - e.n_experts,), -1e30, jnp.float32)
@@ -68,42 +69,50 @@ def _router_probs(x: jax.Array, p: Params, cfg: ModelConfig,
 
 
 def _expert_ffn(h: jax.Array, p: Params, cfg: ModelConfig,
-                qcfg: QuantConfig | None) -> jax.Array:
-    """h: [E, C, d] -> [E, C, d] through stacked quantized expert FFNs."""
+                qcfg: QuantConfig | None, plan=None) -> jax.Array:
+    """h: [E, C, d] -> [E, C, d] through stacked quantized expert FFNs.
+
+    ``plan``: PlanView scoped to the MoE module (``layers.mlp``) — the
+    expert-stacked tensors are single plan paths (``layers.mlp.up`` …), so
+    one lookup covers every expert."""
+    pv = plan_view(plan)
     ins = p.get("in_stream")
     log_sa = None if ins is None else ins["log_sa"]
     if qcfg is not None:
         h = dof.stream_fake_quant(h, ins, qcfg)
-    w_up = dof.effective_weight(p["up"], qcfg, log_sa, h.dtype)
-    w_gate = dof.effective_weight(p["gate"], qcfg, log_sa, h.dtype)
+    w_up = dof.effective_weight(p["up"], qcfg, log_sa, h.dtype,
+                                bits=pv.bits("up"))
+    w_gate = dof.effective_weight(p["gate"], qcfg, log_sa, h.dtype,
+                                  bits=pv.bits("gate"))
     a = jax.nn.silu(jnp.einsum("ecd,edf->ecf", h, w_gate)) * \
         jnp.einsum("ecd,edf->ecf", h, w_up)
     acts = p.get("act_stream")
     if qcfg is not None:
         a = dof.stream_fake_quant(a, acts, qcfg)
     w_down = dof.effective_weight(
-        p["down"], qcfg, None if acts is None else acts["log_sa"], h.dtype)
+        p["down"], qcfg, None if acts is None else acts["log_sa"], h.dtype,
+        bits=pv.bits("down"))
     return jnp.einsum("ecf,efd->ecd", a, w_down)
 
 
 def moe_dense(x: jax.Array, p: Params, cfg: ModelConfig,
-              qcfg: QuantConfig | None) -> jax.Array:
+              qcfg: QuantConfig | None, plan=None) -> jax.Array:
     """Oracle: all experts on all tokens. x: [T, d]."""
     e = cfg.moe
-    probs = _router_probs(x, p, cfg, qcfg)                    # [T, E]
+    probs = _router_probs(x, p, cfg, qcfg, plan=plan)         # [T, E]
     topv, topi = jax.lax.top_k(probs, e.top_k)
     gates = topv / jnp.maximum(jnp.sum(topv, -1, keepdims=True), 1e-9)
     mask = jnp.zeros_like(probs).at[
         jnp.arange(x.shape[0])[:, None], topi].set(gates)     # [T, E]
     E = e.n_experts_padded
     h = jnp.broadcast_to(x[None], (E,) + x.shape)             # [E, T, d]
-    y = _expert_ffn(h, p, cfg, qcfg)                          # [E, T, d]
+    y = _expert_ffn(h, p, cfg, qcfg, plan=plan)               # [E, T, d]
     return jnp.einsum("te,etd->td", mask.astype(y.dtype), y)
 
 
 def moe_sorted(x: jax.Array, p: Params, cfg: ModelConfig,
                qcfg: QuantConfig | None,
-               expert_fn=None) -> jax.Array:
+               expert_fn=None, plan=None) -> jax.Array:
     """Sort-based capacity dispatch. x: [T, d].
 
     ``expert_fn(h_ECd) -> y_ECd`` lets sharding/ep.py swap in the all-to-all
@@ -114,7 +123,7 @@ def moe_sorted(x: jax.Array, p: Params, cfg: ModelConfig,
     E, K = e.n_experts_padded, e.top_k
     C = max(int(T * K / max(e.n_experts, 1) * e.capacity_factor), 1)
 
-    probs = _router_probs(x, p, cfg, qcfg)                    # [T, E]
+    probs = _router_probs(x, p, cfg, qcfg, plan=plan)         # [T, E]
     topv, topi = jax.lax.top_k(probs, K)                      # [T, K]
     gates = topv / jnp.maximum(jnp.sum(topv, -1, keepdims=True), 1e-9)
 
@@ -132,7 +141,7 @@ def moe_sorted(x: jax.Array, p: Params, cfg: ModelConfig,
 
     buf = jnp.zeros((E * C + 1, d), x.dtype).at[dest].set(
         x[t_sorted], mode="drop")
-    y = (expert_fn or (lambda h: _expert_ffn(h, p, cfg, qcfg)))(
+    y = (expert_fn or (lambda h: _expert_ffn(h, p, cfg, qcfg, plan=plan)))(
         buf[:-1].reshape(E, C, d))
     y = y.reshape(E * C, d)
     # combine: gather back each kept assignment, weight by gate, sum over K
@@ -144,13 +153,16 @@ def moe_sorted(x: jax.Array, p: Params, cfg: ModelConfig,
 
 def moe_block(x: jax.Array, p: Params, cfg: ModelConfig,
               qcfg: QuantConfig | None, mode: str = "sorted",
-              expert_fn=None, moe_fn=None) -> jax.Array:
+              expert_fn=None, moe_fn=None, plan=None) -> jax.Array:
     """x: [B, S, d] → routed experts + shared experts.
 
     ``moe_fn``: optional EP shard_map override (sharding/ep.py); may return
     None (e.g. decode steps) to fall back to the in-graph path.
+    ``plan``: QuantPlan/PlanView scoped to this module's path
+    (``layers.mlp``) — router/expert/shared-expert fake-quant bits.
     """
     B, S, d = x.shape
+    pv = plan_view(plan)
     out = None
     if moe_fn is not None:
         y = moe_fn(x, p)
@@ -159,15 +171,19 @@ def moe_block(x: jax.Array, p: Params, cfg: ModelConfig,
     if out is None:
         xt = x.reshape(B * S, d)
         if mode == "dense":
-            routed = moe_dense(xt, p, cfg, qcfg)
+            routed = moe_dense(xt, p, cfg, qcfg, plan=pv)
         else:
-            routed = moe_sorted(xt, p, cfg, qcfg, expert_fn=expert_fn)
+            routed = moe_sorted(xt, p, cfg, qcfg, expert_fn=expert_fn,
+                                plan=pv)
         out = routed.reshape(B, S, d)
     if cfg.moe.n_shared:
         ins = p.get("in_stream")
-        gate = dof.qlinear(x, p["shared_gate"], qcfg, stream=ins)
-        up = dof.qlinear(x, p["shared_up"], qcfg, stream=ins)
+        gate = dof.qlinear(x, p["shared_gate"], qcfg, stream=ins,
+                           bits=pv.bits("shared_gate"))
+        up = dof.qlinear(x, p["shared_up"], qcfg, stream=ins,
+                         bits=pv.bits("shared_up"))
         h = jax.nn.silu(gate) * up
         out = out + dof.qlinear(h, p["shared_down"], qcfg,
-                                stream=p.get("shared_act_stream"))
+                                stream=p.get("shared_act_stream"),
+                                bits=pv.bits("shared_down"))
     return out

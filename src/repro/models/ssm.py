@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core import dof
+from ..core.plan import plan_view
 from ..core.qconfig import QuantConfig
 from .config import ModelConfig
 
@@ -137,14 +138,20 @@ def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
 def ssm_block(x: jax.Array, p: Params, cfg: ModelConfig,
               qcfg: QuantConfig | None,
               cache: Params | None = None, taps: dict | None = None,
-              prefix: str = "") -> tuple[jax.Array, Params | None]:
-    """Full Mamba2 block. x: [B, S, d].  cache: {ssm_state, conv_state}/layer."""
+              prefix: str = "", plan=None) -> tuple[jax.Array, Params | None]:
+    """Full Mamba2 block. x: [B, S, d].  cache: {ssm_state, conv_state}/layer.
+
+    ``plan``: QuantPlan/PlanView scoped to this module's path
+    (``layers.ssm``, ``tail.ssm``) — in/out projection fake-quant bits.
+    """
     s = cfg.ssm
     B, S, d = x.shape
     di, nh = s.d_inner(d), s.n_heads(d)
     g, ds, P = s.n_groups, s.d_state, s.head_dim
+    pv = plan_view(plan)
 
-    zxbcdt = dof.qlinear(x, p["in_proj"], qcfg, stream=p.get("in_stream"))
+    zxbcdt = dof.qlinear(x, p["in_proj"], qcfg, stream=p.get("in_stream"),
+                         bits=pv.bits("in_proj"))
     z, xbc, dt = _split_proj(zxbcdt, cfg)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
     A = -jnp.exp(p["A_log"])                                  # [H] < 0
@@ -207,5 +214,6 @@ def ssm_block(x: jax.Array, p: Params, cfg: ModelConfig,
     if taps is not None:
         from .transformer import _tap
         _tap(taps, prefix + ".out", y)
-    out = dof.qlinear(y, p["out_proj"], qcfg, stream=p.get("out_stream"))
+    out = dof.qlinear(y, p["out_proj"], qcfg, stream=p.get("out_stream"),
+                      bits=pv.bits("out_proj"))
     return out, new_cache

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core import dof
+from ..core.plan import plan_view
 from ..core.qconfig import QuantConfig
 from .attention import (attention, init_attention, init_kv_cache, init_mla,
                         init_mla_cache, mla_attention)
@@ -38,15 +39,21 @@ Params = dict[str, Any]
 # Layer init / forward per family
 # --------------------------------------------------------------------------
 
-def _attn_block(x, lp, cfg, qcfg, positions, cache, taps, prefix):
+def _attn_block(x, lp, cfg, qcfg, positions, cache, taps, prefix, plan=None):
+    """One attention+MLP layer; ``plan`` is a PlanView scoped to the layer's
+    container path (``layers``, ``shared_attn``, …) and narrows to the
+    ``attn``/``mlp`` subtrees here."""
+    pv = plan_view(plan)
     x = constrain_act(x)
     h = rmsnorm(x, lp["norm1"])
     _tap(taps, prefix + ".attn_in", h)
     if cfg.mla is not None:
-        a, new_cache = mla_attention(h, lp["attn"], cfg, qcfg, positions, cache)
+        a, new_cache = mla_attention(h, lp["attn"], cfg, qcfg, positions,
+                                     cache, plan=pv.child("attn"))
     else:
         a, new_cache = attention(h, lp["attn"], cfg, qcfg, positions, cache,
-                                 taps=taps, prefix=prefix + ".attn")
+                                 taps=taps, prefix=prefix + ".attn",
+                                 plan=pv.child("attn"))
     _tap(taps, prefix + ".attn_out", a)
     x = x + a
     h = rmsnorm(x, lp["norm2"])
@@ -55,19 +62,23 @@ def _attn_block(x, lp, cfg, qcfg, positions, cache, taps, prefix):
         m = moe_block(h, lp["mlp"], cfg, qcfg,
                       mode=_RUNTIME.get("moe_mode", "sorted"),
                       expert_fn=_RUNTIME.get("moe_expert_fn"),
-                      moe_fn=_RUNTIME.get("moe_fn"))
+                      moe_fn=_RUNTIME.get("moe_fn"),
+                      plan=pv.child("mlp"))
     else:
-        m = mlp(h, lp["mlp"], qcfg, cfg.mlp, taps=taps, prefix=prefix + ".mlp")
+        m = mlp(h, lp["mlp"], qcfg, cfg.mlp, taps=taps, prefix=prefix + ".mlp",
+                plan=pv.child("mlp"))
     _tap(taps, prefix + ".mlp_out", m)
     return constrain_act(x + m), new_cache
 
 
-def _ssm_layer(x, lp, cfg, qcfg, cache, taps, prefix):
+def _ssm_layer(x, lp, cfg, qcfg, cache, taps, prefix, plan=None):
+    pv = plan_view(plan)
     x = constrain_act(x)
     h = rmsnorm(x, lp["norm1"])
     _tap(taps, prefix + ".ssm_in", h)
     y, new_cache = ssm_block(h, lp["ssm"], cfg, qcfg, cache,
-                             taps=taps, prefix=prefix + ".ssm")
+                             taps=taps, prefix=prefix + ".ssm",
+                             plan=pv.child("ssm"))
     _tap(taps, prefix + ".ssm_out", y)
     return constrain_act(x + y), new_cache
 
@@ -273,17 +284,28 @@ def _scan_layers(x, layers, cfg, qcfg, positions, cache_kv, body):
 def forward(params: Params, cfg: ModelConfig, qcfg: QuantConfig | None,
             batch: dict[str, jax.Array], cache: Params | None = None,
             collect_taps: bool = False,
-            compute_dtype=jnp.bfloat16) -> dict[str, Any]:
+            compute_dtype=jnp.bfloat16, plan=None) -> dict[str, Any]:
     """Returns {hidden, logits, cache, taps}.
 
     modes are implicit: cache=None → full-sequence (train / no-cache eval);
     cache given and S>1 → prefill; cache given and S==1 → decode.
+
+    ``plan`` (a resolved :class:`core.plan.QuantPlan`) makes the fake-quant
+    forward plan-aware: every qlinear quantizes at its plan bits — the same
+    path-qualified lookup export/serving do — so finetuning happens on
+    exactly the grid the artifact ships on (the train≡export invariant; see
+    DESIGN.md).  Lookups resolve at trace time (static Python ints), so jit
+    caching, scan layer-stacking and the fast tier are unaffected.  Without
+    a plan the role-ladder defaults apply (backbone at ``qcfg.w_bits``,
+    lm_head at ``embed_bits``, routers at ``router_bits``) — the correct
+    grid whenever the plan assigns no non-default bits.
     """
     taps: dict | None = {} if collect_taps else None
+    pv = plan_view(plan)
     fam = cfg.family
     if fam == "encdec":
         return _forward_encdec(params, cfg, qcfg, batch, cache, taps,
-                               compute_dtype)
+                               compute_dtype, pv)
 
     tokens = batch["tokens"]
     B, S = tokens.shape
@@ -309,7 +331,8 @@ def forward(params: Params, cfg: ModelConfig, qcfg: QuantConfig | None,
         def body(h, lp, cs, i):
             c = None if cs is None else {**cs, "pos": pos}
             h, nc = _attn_block(h, lp, cfg, qcfg, positions, c, taps,
-                                f"L{i}" if i is not None else "L")
+                                f"L{i}" if i is not None else "L",
+                                plan=pv.child("layers"))
             if nc is not None:
                 nc = {k: v for k, v in nc.items() if k != "pos"}
             return h, nc
@@ -321,13 +344,14 @@ def forward(params: Params, cfg: ModelConfig, qcfg: QuantConfig | None,
     elif fam == "ssm":
         def body(h, lp, cs, i):
             return _ssm_layer(h, lp, cfg, qcfg, cs, taps,
-                              f"L{i}" if i is not None else "L")
+                              f"L{i}" if i is not None else "L",
+                              plan=pv.child("layers"))
         x, nk = _scan_layers(x, params["layers"], cfg, qcfg, positions, cache, body)
         new_cache = nk
 
     elif fam == "hybrid":
         x, new_cache = _forward_hybrid(params, cfg, qcfg, x, positions,
-                                       cache, taps)
+                                       cache, taps, pv)
 
     h = rmsnorm(x, params["final_norm"])
     if cfg.tie_embeddings:
@@ -336,11 +360,12 @@ def forward(params: Params, cfg: ModelConfig, qcfg: QuantConfig | None,
     else:
         logits = dof.qlinear(h, params["lm_head"], qcfg,
                              stream=params.get("head_stream"),
-                             bits=None if qcfg is None else qcfg.embed_bits)
+                             bits=None if qcfg is None
+                             else pv.bits("lm_head", qcfg.embed_bits))
     return {"hidden": h, "logits": logits, "cache": new_cache, "taps": taps}
 
 
-def _forward_hybrid(params, cfg, qcfg, x, positions, cache, taps):
+def _forward_hybrid(params, cfg, qcfg, x, positions, cache, taps, pv):
     k = cfg.attn_every
     G, r = cfg.n_layers // k, cfg.n_layers % k
     shared = params["shared_attn"]
@@ -353,10 +378,12 @@ def _forward_hybrid(params, cfg, qcfg, x, positions, cache, taps):
         for j in range(k):
             lp = jax.tree.map(lambda a: a[j], gp)
             mc = None if mcs is None else jax.tree.map(lambda a: a[j], mcs)
-            h, nm = _ssm_layer(h, lp, cfg, qcfg, mc, taps, f"G.m{j}")
+            h, nm = _ssm_layer(h, lp, cfg, qcfg, mc, taps, f"G.m{j}",
+                               plan=pv.child("layers"))
             nm_slices.append(nm)
         ac = None if cs is None else {**cs[1], "pos": attn_pos}
-        h, na = _attn_block(h, shared, dcfg, qcfg, positions, ac, taps, "G.attn")
+        h, na = _attn_block(h, shared, dcfg, qcfg, positions, ac, taps,
+                            "G.attn", plan=pv.child("shared_attn"))
         nm_stack = (None if mcs is None else
                     jax.tree.map(lambda *s: jnp.stack(s), *nm_slices))
         if na is not None:
@@ -396,7 +423,8 @@ def _forward_hybrid(params, cfg, qcfg, x, positions, cache, taps):
     S = x.shape[1]
     if r:
         def tail_body(h, lp, cs, i):
-            return _ssm_layer(h, lp, cfg, qcfg, cs, taps, f"T{i}")
+            return _ssm_layer(h, lp, cfg, qcfg, cs, taps, f"T{i}",
+                              plan=pv.child("tail"))
         x, nt = _scan_layers(x, params["tail"], cfg, qcfg, positions,
                              None if cache is None else cache["tail"], tail_body)
     if cache is not None:
@@ -407,24 +435,28 @@ def _forward_hybrid(params, cfg, qcfg, x, positions, cache, taps):
     return x, new_cache
 
 
-def _forward_encdec(params, cfg, qcfg, batch, cache, taps, compute_dtype):
+def _forward_encdec(params, cfg, qcfg, batch, cache, taps, compute_dtype, pv):
     d = cfg.d_model
     dcfg = _dense_view(cfg)
     enc_out = None
     new_cache: Params = {}
+    epv, dpv = pv.child("enc_layers"), pv.child("dec_layers")
 
     if cache is None or cache.get("cross") is None:
         frames = batch["frames"].astype(compute_dtype)
-        e = dof.qlinear(frames, params["frame_proj"], qcfg)
+        e = dof.qlinear(frames, params["frame_proj"], qcfg,
+                        bits=pv.bits("frame_proj"))
         Se = e.shape[1]
         epos = jnp.broadcast_to(jnp.arange(Se)[None], (e.shape[0], Se))
 
         def enc_body(h, lp, cs, i):
             h2 = rmsnorm(h, lp["norm1"])
-            a, _ = attention(h2, lp["attn"], dcfg, qcfg, epos, None)
+            a, _ = attention(h2, lp["attn"], dcfg, qcfg, epos, None,
+                             plan=epv.child("attn"))
             h = h + a
             h2 = rmsnorm(h, lp["norm2"])
-            return h + mlp(h2, lp["mlp"], qcfg, cfg.mlp), None
+            return h + mlp(h2, lp["mlp"], qcfg, cfg.mlp,
+                           plan=epv.child("mlp")), None
 
         e, _ = _scan_layers(e, params["enc_layers"], cfg, qcfg, epos, None,
                             enc_body)
@@ -452,10 +484,13 @@ def _forward_encdec(params, cfg, qcfg, batch, cache, taps, compute_dtype):
         else:
             ck = (ck, None)
 
+    cpv = dpv.child("cross")
+
     def dec_body(h, lp, cs, i):
         scs = None if cs is None else ({**cs[0], "pos": pos})
         h2 = rmsnorm(h, lp["norm1"])
-        a, ns = attention(h2, lp["attn"], dcfg, qcfg, positions, scs)
+        a, ns = attention(h2, lp["attn"], dcfg, qcfg, positions, scs,
+                          plan=dpv.child("attn"))
         h = h + a
         # cross attention
         h2 = rmsnorm(h, lp["norm_x"])
@@ -463,21 +498,24 @@ def _forward_encdec(params, cfg, qcfg, batch, cache, taps, compute_dtype):
         ins = cp.get("in_stream")
         Bq, Sq = h2.shape[0], h2.shape[1]
         hd, H, Hkv = cfg.head_dim, cfg.n_heads_padded, cfg.n_kv_heads_padded
-        q = dof.qlinear(h2, cp["wq"], qcfg, stream=ins).reshape(Bq, Sq, H, hd)
+        q = dof.qlinear(h2, cp["wq"], qcfg, stream=ins,
+                        bits=cpv.bits("wq")).reshape(Bq, Sq, H, hd)
         if cs is not None and cs[1] is not None:
             ckx, cvx = cs[1]["k"], cs[1]["v"]
         else:
-            ckx = dof.qlinear(enc_out, cp["wk"], qcfg, stream=ins) \
+            ckx = dof.qlinear(enc_out, cp["wk"], qcfg, stream=ins,
+                              bits=cpv.bits("wk")) \
                 .reshape(Bq, -1, Hkv, hd)
-            cvx = dof.qlinear(enc_out, cp["wv"], qcfg, stream=ins) \
+            cvx = dof.qlinear(enc_out, cp["wv"], qcfg, stream=ins,
+                              bits=cpv.bits("wv")) \
                 .reshape(Bq, -1, Hkv, hd)
         from .attention import _sdpa
         a = _sdpa(q, ckx, cvx, causal=False, q_offset=0)
         a = dof.qlinear(a.reshape(Bq, Sq, H * hd), cp["wo"], qcfg,
-                        stream=cp.get("out_stream"))
+                        stream=cp.get("out_stream"), bits=cpv.bits("wo"))
         h = h + a
         h2 = rmsnorm(h, lp["norm2"])
-        h = h + mlp(h2, lp["mlp"], qcfg, cfg.mlp)
+        h = h + mlp(h2, lp["mlp"], qcfg, cfg.mlp, plan=dpv.child("mlp"))
         if ns is not None:
             ns = {k: v for k, v in ns.items() if k != "pos"}
             return h, (ns, {"k": ckx, "v": cvx})
@@ -488,7 +526,8 @@ def _forward_encdec(params, cfg, qcfg, batch, cache, taps, compute_dtype):
     h = rmsnorm(x, params["final_norm"])
     logits = dof.qlinear(h, params["lm_head"], qcfg,
                          stream=params.get("head_stream"),
-                         bits=None if qcfg is None else qcfg.embed_bits)
+                         bits=None if qcfg is None
+                         else pv.bits("lm_head", qcfg.embed_bits))
     out_cache = None
     if cache is not None:
         out_cache = {"self": {**nk[0], "pos": cache["self"]["pos"] + S},

@@ -76,23 +76,9 @@ class TransformerAdapter:
         self.pcfg = pcfg
         self.cfg = model_cfg
         self.qcfg = qcfg
+        # resolved ONCE; init, the finetune/degradation forwards, export and
+        # serving all read this object — the train≡export grid invariant
         self.qplan = resolve_quant_plan(model_cfg, qcfg)
-        # the transformer training forward reads role-ladder bits (stacked
-        # layers can't read per-path plan bits yet — see ROADMAP);
-        # init/export/serving honor the plan, so surface any gap loudly
-        # instead of silently training against a different grid
-        fwd_bits = {"linear": qcfg.w_bits, "head": qcfg.embed_bits,
-                    "router": getattr(getattr(model_cfg, "moe", None),
-                                      "router_bits", qcfg.exempt_bits)}
-        offgrid = [p for p, s in self.qplan
-                   if s.role in fwd_bits and s.w_bits != fwd_bits[s.role]]
-        if offgrid:
-            import warnings
-            warnings.warn(
-                f"plan assigns non-default bits to {', '.join(offgrid)}; the "
-                f"transformer finetune/degradation forward still fake-quants "
-                f"them at the role-ladder bits while init/export/serving use "
-                f"the plan bits", UserWarning, stacklevel=2)
         self.data = CalibDataset(CalibConfig(
             n_samples=pcfg.calib_samples, seq_len=pcfg.calib_seq_len,
             batch_size=pcfg.calib_batch_size, vocab=model_cfg.vocab,
@@ -137,7 +123,7 @@ class TransformerAdapter:
                 self.cfg, self.qcfg, teacher,
                 QFTConfig(cle_init=self.pcfg.cle, base_lr=self.pcfg.base_lr,
                           checkpoint_every=self.pcfg.checkpoint_every),
-                steps_per_epoch=self.data.steps_per_epoch)
+                steps_per_epoch=self.data.steps_per_epoch, plan=self.qplan)
         return self._trainer
 
     # --------------------------------------------------------------- stages
@@ -180,7 +166,7 @@ class TransformerAdapter:
     def degradation(self, student: Params, teacher: Params) -> dict:
         losses, agree = [], []
         for batch in self.calib_batches()[: self.pcfg.eval_batches]:
-            so = forward(student, self.cfg, self.qcfg, batch)
+            so = forward(student, self.cfg, self.qcfg, batch, plan=self.qplan)
             to = forward(teacher, self.cfg, None, batch)
             losses.append(float(backbone_l2(so["hidden"], to["hidden"])))
             agree.append(float(jnp.mean(

@@ -33,6 +33,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from ..core import dof
+from ..core.plan import plan_view
 from ..core.qconfig import QuantConfig
 from ..models.config import ModelConfig
 from ..models import moe as moe_lib
@@ -41,9 +42,15 @@ Params = dict[str, Any]
 
 
 def make_ep_moe(mesh: Mesh, cfg: ModelConfig, qcfg: QuantConfig | None,
-                dp_axes=("data",), tp_axis: str = "model"):
+                dp_axes=("data",), tp_axis: str = "model", plan=None):
     """Returns moe_fn(x[B,S,d], layer_params) -> y[B,S,d]; register with
-    models.set_runtime(moe_fn=...) to replace the routed-experts path."""
+    models.set_runtime(moe_fn=...) to replace the routed-experts path.
+
+    ``plan``: the resolved QuantPlan — expert/router fake-quant bits are
+    looked up once here (the MoE block always lives at ``layers.mlp``), so
+    the EP path trains on the same grid as the in-graph path and the export.
+    """
+    pv = plan_view(plan).child("layers", "mlp")
     e = cfg.moe
     tp = mesh.shape[tp_axis]
     E = e.n_experts_padded
@@ -68,7 +75,8 @@ def make_ep_moe(mesh: Mesh, cfg: ModelConfig, qcfg: QuantConfig | None,
         K = e.top_k
         C = max(int(T * K / max(e.n_experts, 1) * e.capacity_factor), 1)
 
-        probs = moe_lib._router_probs(xt, p, cfg, qcfg)      # router replicated
+        probs = moe_lib._router_probs(xt, p, cfg, qcfg,
+                                      plan=pv)               # router replicated
         topv, topi = jax.lax.top_k(probs, K)
         gates = topv / jnp.maximum(jnp.sum(topv, -1, keepdims=True), 1e-9)
         flat_e = topi.reshape(-1)
@@ -96,15 +104,18 @@ def make_ep_moe(mesh: Mesh, cfg: ModelConfig, qcfg: QuantConfig | None,
         log_sa = None if ins is None else ins["log_sa"]
         if qcfg is not None:
             h = dof.stream_fake_quant(h, ins, qcfg)
-        w_up = dof.effective_weight(p["up"], qcfg, log_sa, h.dtype)
-        w_gate = dof.effective_weight(p["gate"], qcfg, log_sa, h.dtype)
+        w_up = dof.effective_weight(p["up"], qcfg, log_sa, h.dtype,
+                                    bits=pv.bits("up"))
+        w_gate = dof.effective_weight(p["gate"], qcfg, log_sa, h.dtype,
+                                      bits=pv.bits("gate"))
         a = jax.nn.silu(jnp.einsum("ecd,edf->ecf", h, w_gate)) * \
             jnp.einsum("ecd,edf->ecf", h, w_up)
         acts = p.get("act_stream")
         if qcfg is not None:
             a = dof.stream_fake_quant(a, acts, qcfg)
         w_down = dof.effective_weight(
-            p["down"], qcfg, None if acts is None else acts["log_sa"], h.dtype)
+            p["down"], qcfg, None if acts is None else acts["log_sa"], h.dtype,
+            bits=pv.bits("down"))
         y = jnp.einsum("ecf,efd->ecd", a, w_down)            # [E_loc, tp·C, d]
 
         # ---- return tokens to their owners ---------------------------------

@@ -268,12 +268,19 @@ class QFTConfig:
 
 
 class QFTTrainer:
+    """Drives the QFT finetune.  ``plan`` (a resolved core.plan.QuantPlan)
+    threads per-tensor bits through BOTH the MMSE scale init and the
+    fake-quant training forward, so every stage of the trainer operates on
+    the grid the artifact will export under."""
+
     def __init__(self, cfg: ModelConfig, qcfg: QuantConfig, teacher: Params,
-                 qft: QFTConfig = QFTConfig(), steps_per_epoch: int = 500):
+                 qft: QFTConfig = QFTConfig(), steps_per_epoch: int = 500,
+                 plan: QuantPlan | None = None):
         self.cfg = cfg
         self.qcfg = qcfg
         self.teacher = teacher
         self.qft = qft
+        self.plan = plan
         self.opt = paper_recipe(steps_per_epoch=steps_per_epoch,
                                 base_lr=qft.base_lr)
         grad_mask = None
@@ -286,7 +293,7 @@ class QFTTrainer:
         self._grad_mask = grad_mask
         self.train_step = make_train_step(cfg, qcfg, self.opt,
                                           ce_proportion=qft.ce_proportion,
-                                          grad_mask=grad_mask)
+                                          grad_mask=grad_mask, plan=plan)
 
     # -------------------------------------------------------------- prepare
     def prepare_student(self, key, calib_batches: Iterable[dict]) -> Params:
@@ -295,7 +302,7 @@ class QFTTrainer:
         student = calibrate_student(student, self.cfg, self.qcfg,
                                     self.teacher, calib_batches)
         return init_scales(student, self.cfg, self.qcfg,
-                           cle_init=self.qft.cle_init)
+                           cle_init=self.qft.cle_init, plan=self.plan)
 
     # ------------------------------------------------------------------ run
     def run(self, student: Params, data: Iterable[dict], steps: int,

@@ -21,7 +21,7 @@ from ..optim.adam import Adam
 def make_train_step(cfg: ModelConfig, qcfg: QuantConfig | None, opt: Adam,
                     ce_proportion: float = 0.0,
                     grad_compress=None, grad_mask=None,
-                    microbatches: int = 1):
+                    microbatches: int = 1, plan=None):
     """Returns train_step(student, opt_state, teacher, batch) -> (s, o, metrics).
 
     ``grad_compress``: optional (compress → decompress residual) hook from
@@ -31,10 +31,13 @@ def make_train_step(cfg: ModelConfig, qcfg: QuantConfig | None, opt: Adam,
     ``microbatches``: gradient accumulation — splits the batch on axis 0 and
     lax.scans the fwd/bwd, dividing live activation memory by the count
     (§Perf: the memory-term lever for 100B+ QFT).
+    ``plan``: the resolved core.plan.QuantPlan — the student forward
+    fake-quants each tensor at its plan bits (train≡export invariant); the
+    FP teacher forward never reads it.
     """
 
     def loss_fn(student, teacher, batch):
-        s_out = forward(student, cfg, qcfg, batch)
+        s_out = forward(student, cfg, qcfg, batch, plan=plan)
         t_out = forward(teacher, cfg, None, batch)
         loss = qft_loss(s_out["hidden"], t_out["hidden"],
                         s_out["logits"] if ce_proportion > 0 else None,
@@ -72,24 +75,28 @@ def make_train_step(cfg: ModelConfig, qcfg: QuantConfig | None, opt: Adam,
     return train_step
 
 
-def make_prefill_step(cfg: ModelConfig, qcfg: QuantConfig | None):
-    """prefill_step(params, cache, batch) -> (next_token_logits, cache)."""
+def make_prefill_step(cfg: ModelConfig, qcfg: QuantConfig | None, plan=None):
+    """prefill_step(params, cache, batch) -> (next_token_logits, cache).
+
+    ``plan`` matters only for fake-quant (student) serving, qcfg not None —
+    deployed artifacts run with qcfg=None and carry real quantized weights.
+    """
 
     def prefill_step(params, cache, batch):
-        out = forward(params, cfg, qcfg, batch, cache=cache)
+        out = forward(params, cfg, qcfg, batch, cache=cache, plan=plan)
         return out["logits"][:, -1], out["cache"]
 
     return prefill_step
 
 
-def make_decode_step(cfg: ModelConfig, qcfg: QuantConfig | None):
+def make_decode_step(cfg: ModelConfig, qcfg: QuantConfig | None, plan=None):
     """decode_step(params, cache, batch{tokens:[B,1]}) -> (logits, cache).
 
     Greedy next-token; the cache is donated by callers (serve engine, dryrun).
     """
 
     def decode_step(params, cache, batch):
-        out = forward(params, cfg, qcfg, batch, cache=cache)
+        out = forward(params, cfg, qcfg, batch, cache=cache, plan=plan)
         return out["logits"][:, -1], out["cache"]
 
     return decode_step

@@ -326,14 +326,18 @@ def test_init_qlinear_from_spec_row():
                       np.log(64 ** -0.5 / (2 ** 7 - 1)))
 
 
-def test_transformer_adapter_warns_on_offgrid_backbone_bits():
-    """Until plan bits thread through the transformer forward, a plan that
-    moves a backbone linear off qcfg.w_bits must warn (ROADMAP item)."""
+def test_transformer_adapter_accepts_offgrid_backbone_bits():
+    """Plan bits now thread through the transformer forward, so a plan that
+    moves a backbone linear off qcfg.w_bits is simply honored — the old
+    "trains on a different grid" warning is retired (the bit-exact parity
+    lives in tests/test_plan_threading.py)."""
     from repro.pipeline.adapters import get_adapter
     pcfg = PipelineConfig(arch="qwen3_8b", steps=0,
                           bits_overrides=(("layers.mlp.down", 8),))
-    with pytest.warns(UserWarning, match="non-default bits"):
-        get_adapter(pcfg)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", UserWarning)
+        adapter = get_adapter(pcfg)
+    assert adapter.qplan.spec("layers.mlp.down").w_bits == 8
 
 
 # ---------------------------------------------------------------------------
