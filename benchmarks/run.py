@@ -96,6 +96,87 @@ def _deploy_export_bench() -> list[dict]:
     return rows
 
 
+def _serve_bench(smoke: bool = False) -> list[dict]:
+    """Continuous batching vs static waves on a mixed-length Poisson workload.
+
+    Simulates arrivals in scheduler ticks (1 tick = one Engine.step): the
+    static baseline admits a wave of ``max_slots`` requests only once the
+    engine has fully drained (the pre-PR-5 behavior — one long request holds
+    every slot hostage); continuous batching admits on arrival and refills
+    freed slots immediately.  Both serve the identical request set and
+    arrival schedule, so tokens/step is directly comparable (and, being
+    step-counted, deterministic across machines).  Rows land in
+    benchmarks/results/BENCH_serve.json.
+    """
+    import numpy as np
+    from repro.core import permissive
+    from repro.models import ModelConfig, init_model
+    from repro.serve.engine import Engine, Request, ServeConfig
+    from .common import FAST, RESULTS
+    cfg = ModelConfig(name="serve-bench", family="dense", n_layers=2,
+                      d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                      vocab=128, head_dim=16, scan_layers=False, remat=False)
+    params = init_model(jax.random.PRNGKey(0), cfg, permissive())
+    scfg = ServeConfig(max_slots=4, max_len=96, prefill_chunk=8)
+    n_req = 8 if (smoke or FAST) else 24
+    rng = np.random.RandomState(0)
+    plens = rng.choice([3, 5, 8, 13, 16], n_req)      # few shapes → few jits
+    reqs = [Request(prompt=[int(t) for t in rng.randint(1, cfg.vocab, pl)],
+                    max_new_tokens=int(rng.randint(4, 25)))
+            for pl in plens]
+    arrivals = np.cumsum(rng.poisson(2, n_req))       # arrival tick / request
+
+    engine = Engine(cfg, permissive(), params, scfg)
+
+    def simulate(wave_batching: bool):
+        engine.reset()
+        tick, nxt = 0, 0
+        queue: list[int] = []                         # static: held-back reqs
+        rmap: dict[int, int] = {}                     # rid -> request index
+        done_at: dict[int, int] = {}
+        t0 = time.time()
+        while nxt < n_req or queue or engine.pending():
+            while nxt < n_req and arrivals[nxt] <= tick:
+                if wave_batching:
+                    queue.append(nxt)
+                else:
+                    rmap[engine.submit(reqs[nxt])] = nxt
+                nxt += 1
+            if wave_batching and not engine.pending() and queue:
+                wave, queue = queue[:scfg.max_slots], queue[scfg.max_slots:]
+                for j in wave:
+                    rmap[engine.submit(reqs[j])] = j
+            if engine.pending():
+                for rid in engine.step():
+                    done_at[rmap[rid]] = tick
+            tick += 1
+        wall = time.time() - t0
+        tokens = sum(r.max_new_tokens for r in reqs)  # eos=-1: full budgets
+        lat = [done_at[i] - int(arrivals[i]) for i in range(n_req)]
+        return {"steps": tick, "tokens": tokens, "wall_s": round(wall, 3),
+                "tok_per_step": round(tokens / tick, 4),
+                "mean_latency_steps": round(float(np.mean(lat)), 2),
+                "max_latency_steps": int(np.max(lat))}
+
+    simulate(wave_batching=False)                     # warmup: pay jit once
+    st = simulate(wave_batching=True)
+    ct = simulate(wave_batching=False)
+    speedup = ct["tok_per_step"] / st["tok_per_step"]
+    rows = [
+        {"name": "serve.static_batch", "us_per_call": st["wall_s"] * 1e6,
+         "derived": f"{st['tok_per_step']}tok/step", **st},
+        {"name": "serve.continuous", "us_per_call": ct["wall_s"] * 1e6,
+         "derived": f"{ct['tok_per_step']}tok/step", **ct},
+        {"name": "serve.continuous_vs_static", "us_per_call": 0.0,
+         "derived": f"throughput x{speedup:.2f}", "speedup": round(speedup, 4),
+         "max_slots": scfg.max_slots, "prefill_chunk": scfg.prefill_chunk,
+         "n_requests": n_req},
+    ]
+    out = RESULTS / "BENCH_serve.json"
+    out.write_text(json.dumps(rows, indent=1, default=str))
+    return rows
+
+
 def _kernel_timings() -> list[dict]:
     """µs/call for the three Pallas kernels (interpret) vs jnp oracles."""
     from repro.core.fakequant import pack_int4
@@ -121,6 +202,13 @@ def _kernel_timings() -> list[dict]:
 
 
 def main() -> None:
+    import sys
+    if "--serve-smoke" in sys.argv:
+        # CI entry: just the serving bench → BENCH_serve.json (fast)
+        print("name,us_per_call,derived")
+        for r in _serve_bench(smoke=True):
+            print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+        return
     from . import paper_figures as F
     from . import roofline
     t_all = time.time()
@@ -137,6 +225,7 @@ def main() -> None:
         ("kernel_timings", _kernel_timings),
         ("quant_matmul_layouts", _quant_matmul_layout_bench),
         ("deploy_export", _deploy_export_bench),
+        ("serve_continuous_batching", _serve_bench),
     ]
     print("name,us_per_call,derived")
     for name, fn in benches:

@@ -23,7 +23,7 @@ def main():
     params = init_model(jax.random.PRNGKey(0), cfg, permissive())
     t0 = time.time()
     engine = Engine(cfg, permissive(), params,
-                    ServeConfig(slots=4, max_len=128))
+                    ServeConfig(max_slots=2, max_len=128, prefill_chunk=4))
     print(f"engine ready in {time.time()-t0:.1f}s "
           f"(weights exported to int4-packed artifact)")
 
@@ -38,7 +38,8 @@ def main():
     n_tok = sum(len(o) for o in outs)
     for i, o in enumerate(outs):
         print(f"req{i}: prompt={requests[i].prompt} -> {o}")
-    print(f"{n_tok} tokens in {dt:.2f}s ({n_tok/dt:.1f} tok/s batched on CPU)")
+    print(f"{n_tok} tokens in {dt:.2f}s ({n_tok/dt:.1f} tok/s, 3 requests "
+          f"continuously batched over 2 slots on CPU)")
 
 
 if __name__ == "__main__":

@@ -70,6 +70,10 @@ def main() -> None:
     ap.add_argument("--show-plan", action="store_true",
                     help="print the resolved per-tensor QuantPlan the "
                          "artifact is served under")
+    ap.add_argument("--max-slots", type=int, default=4,
+                    help="decode slot pool size (continuous batching)")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="prompt tokens prefilled per slot per step")
     args = ap.parse_args()
     if args.arch in ("paper-cnn", "paper_cnn"):
         print("error: paper-cnn is a classifier — it has no token-serving "
@@ -109,8 +113,10 @@ def main() -> None:
         print(f"kernel route: {kernel_route_check(artifact, result.plan)}")
 
     cfg = dataclasses.replace(result.model_cfg, scan_layers=False, remat=False)
-    engine = Engine.from_artifact(cfg, result.plan, artifact,
-                                  ServeConfig(slots=4, max_len=128))
+    engine = Engine.from_artifact(
+        cfg, result.plan, artifact,
+        ServeConfig(max_slots=args.max_slots, max_len=128,
+                    prefill_chunk=args.prefill_chunk))
     outs = engine.generate([Request(prompt=[1, 2, 3], max_new_tokens=8),
                             Request(prompt=[4, 5], max_new_tokens=8)])
     for i, o in enumerate(outs):

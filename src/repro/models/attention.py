@@ -57,7 +57,11 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, n_layers: int,
 
 def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool,
           q_offset: jax.Array | int, kv_len: jax.Array | None = None) -> jax.Array:
-    """q: [B,Sq,H,hd]; k,v: [B,Skv,Hkv,hd] (GQA grouping inside). f32 softmax."""
+    """q: [B,Sq,H,hd]; k,v: [B,Skv,Hkv,hd] (GQA grouping inside). f32 softmax.
+
+    ``q_offset``/``kv_len`` may be per-slot vectors [B] (continuous-batching
+    serving: every slot is at its own sequence offset); the mask then becomes
+    [B,Sq,Skv] and each batch row attends only its own valid prefix."""
     B, Sq, H, hd = q.shape
     Skv, Hkv = k.shape[1], k.shape[2]
     G = H // Hkv
@@ -65,14 +69,25 @@ def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool,
     logits = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
                         preferred_element_type=jnp.float32)
     logits = logits * (hd ** -0.5)
-    pos_q = jnp.asarray(q_offset) + jnp.arange(Sq)
+    off = jnp.asarray(q_offset)
     pos_k = jnp.arange(Skv)
-    mask = jnp.ones((Sq, Skv), bool)
-    if causal:
-        mask = mask & (pos_q[:, None] >= pos_k[None, :])
-    if kv_len is not None:                       # cached decode: valid prefix
-        mask = mask & (pos_k[None, :] < kv_len)
-    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    if off.ndim:                                 # per-slot offsets [B]
+        pos_q = off[:, None] + jnp.arange(Sq)[None, :]          # [B,Sq]
+        mask = jnp.ones((B, Sq, Skv), bool)
+        if causal:
+            mask = mask & (pos_q[:, :, None] >= pos_k[None, None, :])
+        if kv_len is not None:
+            mask = mask & (pos_k[None, None, :]
+                           < jnp.asarray(kv_len)[:, None, None])
+        logits = jnp.where(mask[:, None, None], logits, -1e30)
+    else:
+        pos_q = off + jnp.arange(Sq)
+        mask = jnp.ones((Sq, Skv), bool)
+        if causal:
+            mask = mask & (pos_q[:, None] >= pos_k[None, :])
+        if kv_len is not None:                   # cached decode: valid prefix
+            mask = mask & (pos_k[None, :] < kv_len)
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
     out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
     return out.reshape(B, Sq, H, hd)
@@ -113,10 +128,19 @@ def attention(x: jax.Array, p: Params, cfg: ModelConfig,
         new_cache = None
     else:
         pos = cache["pos"]
-        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                          (0, pos, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                          (0, pos, 0, 0))
+        if getattr(pos, "ndim", 0) == 1:
+            # per-slot offsets (continuous-batching serve): each slot writes
+            # its new K/V at its own length and masks its own valid prefix
+            def upd(c, u, p):
+                return jax.lax.dynamic_update_slice(
+                    c, u.astype(c.dtype), (p, 0, 0))
+            ck = jax.vmap(upd)(cache["k"], k, pos)
+            cv = jax.vmap(upd)(cache["v"], v, pos)
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
         out = _sdpa(q, ck, cv, causal=Sq > 1, q_offset=pos, kv_len=pos + Sq)
         new_cache = {"k": ck, "v": cv, "pos": pos + Sq}
     out = out.reshape(B, Sq, H * hd)
@@ -193,10 +217,17 @@ def mla_attention(x: jax.Array, p: Params, cfg: ModelConfig,
 
     if cache is not None:
         pos = cache["pos"]
-        ckv_all = jax.lax.dynamic_update_slice(
-            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, pos, 0))
-        kr_all = jax.lax.dynamic_update_slice(
-            cache["kr"], kr.astype(cache["kr"].dtype), (0, pos, 0))
+        if getattr(pos, "ndim", 0) == 1:         # per-slot offsets (serving)
+            def upd(c, u, p):
+                return jax.lax.dynamic_update_slice(
+                    c, u.astype(c.dtype), (p, 0))
+            ckv_all = jax.vmap(upd)(cache["ckv"], ckv, pos)
+            kr_all = jax.vmap(upd)(cache["kr"], kr, pos)
+        else:
+            ckv_all = jax.lax.dynamic_update_slice(
+                cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, pos, 0))
+            kr_all = jax.lax.dynamic_update_slice(
+                cache["kr"], kr.astype(cache["kr"].dtype), (0, pos, 0))
         new_cache = {"ckv": ckv_all, "kr": kr_all, "pos": pos + Sq}
         kv_len = pos + Sq
         q_offset = pos
@@ -226,12 +257,21 @@ def mla_attention(x: jax.Array, p: Params, cfg: ModelConfig,
                   + jnp.einsum("bqhr,bsr->bhqs", q_rope, kr_all,
                                preferred_element_type=jnp.float32)) * scale
 
-    pos_q = (jnp.asarray(q_offset) if q_offset is not None else 0) + jnp.arange(Sq)
+    off = jnp.asarray(q_offset if q_offset is not None else 0)
     pos_k = jnp.arange(Skv)
-    mask = pos_q[:, None] >= pos_k[None, :]
-    if kv_len is not None:
-        mask = mask & (pos_k[None, :] < kv_len)
-    logits = jnp.where(mask[None, None], logits, -1e30)
+    if off.ndim:                                 # per-slot offsets [B]
+        pos_q = off[:, None] + jnp.arange(Sq)[None, :]          # [B,Sq]
+        mask = pos_q[:, :, None] >= pos_k[None, None, :]
+        if kv_len is not None:
+            mask = mask & (pos_k[None, None, :]
+                           < jnp.asarray(kv_len)[:, None, None])
+        logits = jnp.where(mask[:, None], logits, -1e30)
+    else:
+        pos_q = off + jnp.arange(Sq)
+        mask = pos_q[:, None] >= pos_k[None, :]
+        if kv_len is not None:
+            mask = mask & (pos_k[None, :] < kv_len)
+        logits = jnp.where(mask[None, None], logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
 
     if cfg.mla_absorb:

@@ -314,14 +314,23 @@ def forward(params: Params, cfg: ModelConfig, qcfg: QuantConfig | None,
         x = jnp.concatenate(
             [batch["patch_embeds"].astype(compute_dtype), x], axis=1)
         S = x.shape[1]
-    base = cache["pos"] if (cache is not None and "pos" in cache) else 0
+    if cache is not None and "pos" in cache:
+        base = cache["pos"]
+    elif (cache is not None and isinstance(cache.get("attn"), dict)
+          and "pos" in cache["attn"]):
+        base = cache["attn"]["pos"]              # hybrid: shared-attn cache
+    else:
+        base = 0
+    # per-slot serving caches carry a [B] position vector — one offset per
+    # slot — instead of the scalar the static train/dryrun paths use
+    off = base[:, None] if getattr(base, "ndim", 0) == 1 else base
     if "positions" in batch:
         positions = batch["positions"]
     elif cfg.mrope_sections:
-        pos1 = base + jnp.arange(S)[None, :]
+        pos1 = off + jnp.arange(S)[None, :]      # [1,S] or [B,S]
         positions = jnp.broadcast_to(pos1[:, None, :], (B, 3, S))
     else:
-        positions = jnp.broadcast_to(base + jnp.arange(S)[None, :], (B, S))
+        positions = jnp.broadcast_to(off + jnp.arange(S)[None, :], (B, S))
 
     new_cache = None
     if fam in ("dense", "moe", "mla_moe", "vlm"):

@@ -195,12 +195,15 @@ class TransformerAdapter:
     def serve_smoke(self, artifact: Params, plan: DeployPlan) -> dict:
         from ..serve.engine import Engine, Request, ServeConfig
         cfg = dataclasses.replace(self.cfg, scan_layers=False, remat=False)
-        engine = Engine.from_artifact(cfg, plan, artifact,
-                                      ServeConfig(slots=4, max_len=64))
+        engine = Engine.from_artifact(
+            cfg, plan, artifact,
+            ServeConfig(max_slots=self.pcfg.serve_max_slots, max_len=64,
+                        prefill_chunk=self.pcfg.serve_prefill_chunk))
         outs = engine.generate([Request(prompt=[1, 2, 3], max_new_tokens=8),
                                 Request(prompt=[4, 5], max_new_tokens=4)])
         assert len(outs) == 2 and len(outs[0]) == 8 and len(outs[1]) == 4
-        return {"requests": 2, "tokens": sum(len(o) for o in outs)}
+        return {"requests": 2, "tokens": sum(len(o) for o in outs),
+                "max_slots": engine.scfg.max_slots}
 
 
 # ---------------------------------------------------------------------------

@@ -59,6 +59,10 @@ def build_parser() -> argparse.ArgumentParser:
     q.add_argument("--stop-after", choices=STAGES, default=None)
     q.add_argument("--serve-smoke", action="store_true",
                    help="transformers: decode a demo batch from the artifact")
+    q.add_argument("--max-slots", type=int, default=4,
+                   help="serve smoke: decode slot pool size")
+    q.add_argument("--prefill-chunk", type=int, default=32,
+                   help="serve smoke: prompt tokens prefilled per step")
     q.add_argument("--use-pallas", action="store_true",
                    help="route deployed matmuls through kernels/quant_matmul")
     _add_plan_knobs(q)
@@ -117,7 +121,8 @@ def _pcfg_from_args(args: argparse.Namespace) -> PipelineConfig:
         calib_samples=args.calib_samples, calib_seq_len=args.calib_seq_len,
         calib_batch_size=args.calib_batch_size, workdir=args.workdir,
         resume=not args.no_resume, stop_after=args.stop_after,
-        serve_smoke=args.serve_smoke, use_pallas=args.use_pallas,
+        serve_smoke=args.serve_smoke, serve_max_slots=args.max_slots,
+        serve_prefill_chunk=args.prefill_chunk, use_pallas=args.use_pallas,
         log_every=max(args.steps // 6, 1))
 
 

@@ -59,6 +59,8 @@ class PipelineConfig:
     # evaluation / deployment smoke
     eval_batches: int = 2
     serve_smoke: bool = False         # transformer families: run the engine
+    serve_max_slots: int = 4          # engine decode slot pool
+    serve_prefill_chunk: int = 32     # prompt tokens prefilled per step
     use_pallas: bool = False          # route deployed matmuls through Pallas
     # orchestration
     workdir: str | None = None        # enables per-stage checkpoint + resume

@@ -34,6 +34,7 @@ from ..core.plan import (PLAN_KEY, STREAM_KEYS, STREAM_OF,  # noqa: F401
                          QuantPlan, _is_qlinear, plan_from_array,
                          plan_to_array, resolve_plan)
 from ..core.qconfig import QLayout, QuantConfig
+from ..models import init_cache
 
 Params = dict[str, Any]
 
@@ -143,6 +144,30 @@ def _as_plan(plan_or_qcfg, params=None, artifact=None) -> DeployPlan:
         plan = dataclasses.replace(
             plan, quant_plan=resolve_plan(plan.qcfg, params))
     return plan
+
+
+def init_slot_cache(cfg, max_slots: int, max_len: int,
+                    dtype=jnp.bfloat16) -> Params:
+    """Preallocated slot-indexed serving cache for the continuous-batching
+    engine: ``models.init_cache`` with every position leaf vectorized to a
+    per-slot offset vector [max_slots].
+
+    A scalar ``pos`` models one wave advancing in lockstep; continuous
+    batching admits/evicts per slot, so each slot tracks its own sequence
+    offset and the attention mask / K-V write location become per-slot
+    (models/attention.py vector-pos path).  The cache shape is fixed at
+    engine construction — admission scatters a freshly prefilled batch-1
+    cache into one slot row; the decode step never reallocates.
+    """
+    cache = init_cache(cfg, max_slots, max_len, dtype)
+
+    def fix(path, leaf):
+        if (leaf is not None and path
+                and getattr(path[-1], "key", None) == "pos"):
+            return jnp.zeros((max_slots,), jnp.int32)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(fix, cache)
 
 
 def _stream_log_sa(name: str, parent: Params):

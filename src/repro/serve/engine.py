@@ -1,25 +1,38 @@
-"""Batched serving engine for QFT-quantized models.
+"""Continuous-batching serving engine for QFT-quantized models.
 
-Continuous-batching-lite: a request pool is packed into a fixed-shape slot
-batch (padded), prefilled once per admission wave, then decoded step-by-step
-with donated caches.  Weights are the deployment artifact (int4-packed) from
-serve/deploy.py; on TPU the matmuls route through kernels/quant_matmul.
+A :class:`Scheduler` owns an arrival-ordered request queue and a fixed pool
+of decode slots backed by one preallocated slot-indexed KV cache
+(``serve.deploy.init_slot_cache``, per-slot offsets).  Admission prefills a
+request ALONE (batch 1, chunked — long prompts spread across steps instead
+of stalling the decode batch) and scatters the finished cache into its slot
+row; a finished slot is refilled by the next queued request at the next
+step.  The decode step is ONE jitted shape-stable call over all slots (dead
+slots masked, see train/steps.make_slot_decode_step) with exactly one host
+transfer per step — PR 2's device-side-bookkeeping invariant.
 
-Greedy decoding; per-slot stop handling; slots are recycled when a sequence
-finishes (new requests admitted at the next wave boundary).
+Because every request is prefilled alone and decode slots never interact,
+a request's output tokens are bit-identical whether it is served alone, in
+a static batch, or interleaved under continuous batching — the conformance
+contract of tests/test_serve_scheduler.py.
+
+Weights are the deployment artifact (int4-packed) from serve/deploy.py; on
+TPU the matmuls route through kernels/quant_matmul.  Greedy decoding.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
 
 from ..core.qconfig import QuantConfig
-from ..models import forward, init_cache
+from ..models import init_cache
 from ..models.config import ModelConfig
+from ..train.steps import make_prefill_step, make_slot_decode_step
 from .deploy import (DeployPlan, deploy_view, export_for_layers,
-                     make_deploy_plan, plan_from_artifact)
+                     init_slot_cache, make_deploy_plan, plan_from_artifact)
 
 
 @dataclasses.dataclass
@@ -27,13 +40,103 @@ class Request:
     prompt: list[int]
     max_new_tokens: int = 32
     eos_id: int = -1                  # -1: never stop early
+    rid: int | None = None            # arrival order; assigned by submit()
 
 
 @dataclasses.dataclass
 class ServeConfig:
-    slots: int = 8                    # fixed decode batch
-    max_len: int = 512
-    prefill_chunk: int = 128          # prompts padded to this
+    max_slots: int = 8                # fixed decode slot pool
+    max_len: int = 512                # per-slot KV capacity
+    prefill_chunk: int = 128          # tokens prefilled per slot per step
+    slots: dataclasses.InitVar[int | None] = None   # legacy alias
+
+    def __post_init__(self, slots):
+        if slots is not None:
+            self.max_slots = slots
+
+
+class Scheduler:
+    """Host-side continuous-batching scheduler: FIFO queue + slot pool.
+
+    Pure bookkeeping (no jax) — admission order is arrival order, freed
+    slots are reused lowest-index first so scheduling is deterministic.
+    """
+
+    def __init__(self, max_slots: int):
+        self.max_slots = max_slots
+        self.queue: collections.deque[Request] = collections.deque()
+        self.free: list[int] = sorted(range(max_slots), reverse=True)
+        self.running: dict[int, int] = {}          # slot -> rid
+        self._next_rid = 0
+
+    def submit(self, req: Request) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(dataclasses.replace(req, rid=rid))
+        return rid
+
+    def admit(self) -> list[tuple[int, Request]]:
+        """Pop queued requests into free slots: [(slot, request), ...]."""
+        out = []
+        while self.free and self.queue:
+            slot = self.free.pop()
+            req = self.queue.popleft()
+            self.running[slot] = req.rid
+            out.append((slot, req))
+        return out
+
+    def evict(self, slot: int) -> int:
+        """Release a finished slot back to the pool; returns its rid."""
+        rid = self.running.pop(slot)
+        self.free.append(slot)
+        self.free.sort(reverse=True)
+        return rid
+
+    @property
+    def pending(self) -> int:
+        """Requests submitted but not yet finished (queued + running)."""
+        return len(self.queue) + len(self.running)
+
+
+def _install_step(cache, state, slot_cache, slot, last_logits, plen,
+                  budget, eos):
+    """Scatter a finished batch-1 prefill into slot row ``slot`` of the big
+    cache and activate the slot (first token = greedy argmax of the last
+    prompt logits).  The whole slot row is overwritten, so any garbage the
+    masked decode wrote into a dead slot is erased on admission."""
+
+    def leaf(path, big, small):
+        if getattr(path[-1], "key", None) == "pos":
+            # big: per-slot vector [S]; small: the batch-1 scalar == plen
+            return big.at[slot].set(plen)
+        if big.shape == small.shape:              # max_slots == 1
+            return small.astype(big.dtype)
+        axis = next(i for i in range(big.ndim)
+                    if big.shape[i] != small.shape[i])
+        start = tuple(slot if i == axis else 0 for i in range(big.ndim))
+        return jax.lax.dynamic_update_slice(big, small.astype(big.dtype),
+                                            start)
+
+    cache = jax.tree_util.tree_map_with_path(leaf, cache, slot_cache)
+    first = jnp.argmax(last_logits, -1).astype(jnp.int32)
+    state = {"cur": state["cur"].at[slot].set(first),
+             "done": state["done"].at[slot].set(False),
+             "counts": state["counts"].at[slot].set(0),
+             "budget": state["budget"].at[slot].set(budget),
+             "eos": state["eos"].at[slot].set(eos)}
+    return cache, state
+
+
+_INSTALL = jax.jit(_install_step, donate_argnums=(0, 1))
+
+
+@functools.lru_cache(maxsize=32)
+def _serve_steps(cfg: ModelConfig):
+    """Jitted serving step functions, shared across Engine instances of the
+    same ModelConfig (conformance tests build many engines per config)."""
+    prefill = jax.jit(make_prefill_step(cfg, None), donate_argnums=(1,))
+    decode = jax.jit(make_slot_decode_step(cfg, None), donate_argnums=(1, 2))
+    return prefill, decode
 
 
 class Engine:
@@ -41,6 +144,11 @@ class Engine:
 
     Construct either from trained student params (exports inline) or — the
     pipeline path — from an already-exported artifact via ``from_artifact``.
+
+    The serving API is ``submit`` (enqueue, returns an arrival-ordered
+    request id) + ``step`` (one scheduler tick: admissions, one prefill
+    chunk per prefilling slot, one masked decode step; returns the requests
+    finished this tick).  ``generate`` is a thin submit-all-then-drain.
     """
 
     def __init__(self, cfg: ModelConfig, qcfg: QuantConfig, student_params,
@@ -78,60 +186,149 @@ class Engine:
         # fresh per-engine config: a dataclass default instance would be
         # shared (and mutable) across every Engine in the process
         self.scfg = scfg if scfg is not None else ServeConfig()
+        if self.scfg.max_slots < 1 or self.scfg.prefill_chunk < 1:
+            raise ValueError(f"ServeConfig needs max_slots >= 1 and "
+                             f"prefill_chunk >= 1, got {self.scfg}")
         self.plan = plan
         self.qcfg = plan.qcfg
         self.params = jax.jit(lambda e: deploy_view(e, plan))(exported)
         self.exported = exported
+        self._prefill, self._decode = _serve_steps(cfg)
+        self.reset()
 
-        def _prefill(params, cache, tokens):
-            out = forward(params, cfg, None, {"tokens": tokens}, cache=cache)
-            return out["logits"][:, -1], out["cache"]
+    # ------------------------------------------------------------ lifecycle
+    def reset(self) -> None:
+        """Fresh serving state: empty queue, all slots free, zeroed cache.
+        Compiled step functions are retained — resetting is cheap."""
+        S = self.scfg.max_slots
+        self.sched = Scheduler(S)
+        self.cache = init_slot_cache(self.cfg, S, self.scfg.max_len)
+        self.state = {"cur": jnp.zeros((S,), jnp.int32),
+                      "done": jnp.ones((S,), bool),
+                      "counts": jnp.zeros((S,), jnp.int32),
+                      "budget": jnp.zeros((S,), jnp.int32),
+                      "eos": jnp.full((S,), -1, jnp.int32)}
+        self._prefilling: dict[int, dict] = {}    # slot -> prefill progress
+        self._alive: set[int] = set()
+        self._results: dict[int, list[int]] = {}  # in-flight token streams
+        self._collected: dict[int, list[int]] = {}  # finished, drained by a
+                                                    # foreign generate() call
+        self._work: dict[int, int] = {}           # rid -> step-count estimate
 
-        def _decode(params, cache, tokens):
-            out = forward(params, cfg, None, {"tokens": tokens}, cache=cache)
-            return out["logits"][:, -1], out["cache"]
+    # ------------------------------------------------------------ serve API
+    def _validate(self, request: Request) -> None:
+        p = request.prompt
+        if not isinstance(p, (list, tuple)) or len(p) == 0:
+            raise ValueError(
+                f"request prompt must be a non-empty token list, got {p!r}")
+        if request.max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {request.max_new_tokens}")
+        need = len(p) + request.max_new_tokens
+        if need > self.scfg.max_len:
+            raise ValueError(
+                f"request needs {need} cache positions ({len(p)} prompt + "
+                f"{request.max_new_tokens} new) but ServeConfig.max_len is "
+                f"{self.scfg.max_len}; raise max_len or shorten the request")
 
-        self._prefill = jax.jit(_prefill, donate_argnums=(1,))
-        self._decode = jax.jit(_decode, donate_argnums=(1,))
+    def submit(self, request: Request) -> int:
+        """Enqueue a request; returns its arrival-ordered id."""
+        self._validate(request)
+        rid = self.sched.submit(request)
+        self._results[rid] = []
+        self._work[rid] = (-(-len(request.prompt) // self.scfg.prefill_chunk)
+                           + request.max_new_tokens)
+        return rid
+
+    def pending(self) -> int:
+        """Submitted-but-unfinished request count (drive step() while > 0)."""
+        return self.sched.pending
+
+    def result(self, rid: int) -> list[int]:
+        """Tokens for a request: in-flight progress for a pending rid, or —
+        once, popping it — a finished request whose tokens were drained by
+        someone else's generate() call.  Finished requests are otherwise
+        handed to the step() caller and not retained (bounded memory)."""
+        if rid in self._results:
+            return list(self._results[rid])
+        return self._collected.pop(rid)
+
+    def step(self) -> dict[int, list[int]]:
+        """One scheduler tick.  Returns {rid: tokens} for requests that
+        finished this tick — ownership transfers to the caller (the engine
+        drops its copy, keeping a long-running server's memory bounded).
+
+        1. admission: free slots pull from the queue (arrival order);
+        2. chunked prefill: each prefilling slot advances one prompt chunk
+           in its own batch-1 cache; finished prefills are scattered into
+           the slot cache and the slot activates;
+        3. decode: ONE jitted call over all slots + ONE host transfer.
+        """
+        scfg = self.scfg
+        for slot, req in self.sched.admit():
+            self._prefilling[slot] = {
+                "req": req, "off": 0,
+                "cache": init_cache(self.cfg, 1, scfg.max_len)}
+
+        for slot in sorted(self._prefilling):
+            st = self._prefilling[slot]
+            req, off = st["req"], st["off"]
+            chunk = req.prompt[off: off + scfg.prefill_chunk]
+            toks = jnp.asarray([chunk], jnp.int32)
+            logits, st["cache"] = self._prefill(self.params, st["cache"],
+                                                {"tokens": toks})
+            st["off"] = off + len(chunk)
+            if st["off"] == len(req.prompt):
+                self.cache, self.state = _INSTALL(
+                    self.cache, self.state, st["cache"], slot, logits[0],
+                    len(req.prompt), req.max_new_tokens, req.eos_id)
+                self._alive.add(slot)
+                del self._prefilling[slot]
+
+        finished: dict[int, list[int]] = {}
+        if self._alive:
+            self.cache, self.state, emitted, emit = self._decode(
+                self.params, self.cache, self.state)
+            toks_h, emit_h, done_h = jax.device_get(
+                (emitted, emit, self.state["done"]))  # the step's ONE sync
+            for slot in sorted(self._alive):
+                rid = self.sched.running[slot]
+                if emit_h[slot]:
+                    self._results[rid].append(int(toks_h[slot]))
+                if done_h[slot]:
+                    self.sched.evict(slot)
+                    self._alive.discard(slot)
+                    del self._work[rid]
+                    finished[rid] = self._results.pop(rid)
+        return finished
 
     def generate(self, requests: list[Request]) -> list[list[int]]:
-        """Serve a wave of requests (≤ slots), batched."""
-        scfg = self.scfg
-        n = len(requests)
-        assert n <= scfg.slots
-        # pad prompts to a common chunk length (left-pad with 0)
-        plen = max(len(r.prompt) for r in requests)
-        plen = min(((plen + 7) // 8) * 8, scfg.prefill_chunk)
-        toks = jnp.zeros((scfg.slots, plen), jnp.int32)
-        for i, r in enumerate(requests):
-            p = jnp.asarray(r.prompt[-plen:], jnp.int32)
-            toks = toks.at[i, plen - len(p):].set(p)
+        """Serve a list of requests to completion (submit-all + drain).
 
-        cache = init_cache(self.cfg, scfg.slots, scfg.max_len)
-        logits, cache = self._prefill(self.params, cache, toks)
-        outs: list[list[int]] = [[] for _ in range(scfg.slots)]
-        max_new = max(r.max_new_tokens for r in requests)
-        # per-slot stop bookkeeping stays on device (one transfer per step,
-        # not one blocking int(cur[i]) sync per slot per step); padding slots
-        # start done so they never emit
-        eos = jnp.asarray([r.eos_id for r in requests]
-                          + [-1] * (scfg.slots - n), jnp.int32)
-        budget = jnp.asarray([r.max_new_tokens for r in requests]
-                             + [0] * (scfg.slots - n), jnp.int32)
-        done = jnp.arange(scfg.slots) >= n              # [slots] bool
-        counts = jnp.zeros((scfg.slots,), jnp.int32)
-        cur = jnp.argmax(logits, -1)                    # [slots]
-        for step in range(max_new):
-            emit = ~done
-            counts = counts + emit
-            done = done | (emit & (cur == eos)) | (counts >= budget)
-            toks_h, emit_h, all_done = jax.device_get(
-                (cur, emit, jnp.all(done)))             # the step's one sync
-            for i in range(n):
-                if emit_h[i]:
-                    outs[i].append(int(toks_h[i]))
-            if all_done:
-                break
-            logits, cache = self._decode(self.params, cache, cur[:, None])
-            cur = jnp.argmax(logits, -1)
-        return outs[:n]
+        Any request count works — requests beyond the slot pool queue and
+        are admitted as slots free up."""
+        if not requests:
+            raise ValueError("Engine.generate needs a non-empty request "
+                             "list; got an empty one")
+        for r in requests:       # all-or-nothing: a bad request mid-list
+            self._validate(r)    # must not leave earlier ones enqueued
+        rids = set(self.submit(r) for r in requests)
+        # generous upper bound over ALL outstanding work (the drain also
+        # finishes requests submitted earlier through submit()): every
+        # prompt chunk + every decode step could happen serially; past it
+        # something is wedged — fail, don't hang
+        limit = 64 + 2 * sum(self._work.values())
+        collected: dict[int, list[int]] = {}
+        steps = 0
+        while self.pending():
+            collected.update(self.step())
+            steps += 1
+            if steps > limit:
+                raise RuntimeError(
+                    f"serve loop made no progress after {steps} steps "
+                    f"({self.pending()} requests still pending)")
+        # foreign rids drained alongside ours stay retrievable via result()
+        self._collected.update(
+            (rid, toks) for rid, toks in collected.items()
+            if rid not in rids)
+        return [collected[rid] for rid in sorted(rids)]

@@ -80,6 +80,13 @@ def make_prefill_step(cfg: ModelConfig, qcfg: QuantConfig | None, plan=None):
 
     ``plan`` matters only for fake-quant (student) serving, qcfg not None —
     deployed artifacts run with qcfg=None and carry real quantized weights.
+
+    The continuous-batching serve engine drives this same step for chunked
+    per-slot prefill: batch-1 cache, one *exact-length* prompt chunk per
+    call (never padded — SSM state consumes every token it sees, so pad
+    tokens can't be masked out the way attention masks them).  Prefilling
+    each request alone is what makes its tokens independent of what shares
+    the decode batch (tests/test_serve_scheduler.py).
     """
 
     def prefill_step(params, cache, batch):
@@ -100,3 +107,42 @@ def make_decode_step(cfg: ModelConfig, qcfg: QuantConfig | None, plan=None):
         return out["logits"][:, -1], out["cache"]
 
     return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Slot-masked decode — the continuous-batching serve engine's step function
+# (per-slot prefill reuses make_prefill_step above, batch-1 and chunked)
+# ---------------------------------------------------------------------------
+
+def make_slot_decode_step(cfg: ModelConfig, qcfg: QuantConfig | None,
+                          plan=None):
+    """Slot-masked decode over the full slot pool — ONE shape-stable call.
+
+    slot_decode_step(params, cache, state) -> (cache, state, emitted, emit)
+
+    ``state``: {cur [S], done [S], counts [S], budget [S], eos [S]} — all
+    device-resident, so the engine's decode loop needs exactly one host
+    transfer per step (fetch (emitted, emit, done)) regardless of slot count.
+    Dead slots (done) still run through the forward — keeping the decode
+    shape static across admissions/evictions — but their emissions are
+    masked and their bookkeeping frozen.
+
+    Emission order matches the legacy wave engine: the step emits the
+    *current* token (prefill's argmax on admission, last step's argmax
+    after), updates done from eos/budget, then decodes to produce the next.
+    """
+
+    def slot_decode_step(params, cache, state):
+        cur, done = state["cur"], state["done"]
+        emit = ~done
+        counts = state["counts"] + emit
+        done = done | (emit & (cur == state["eos"])) \
+                    | (counts >= state["budget"])
+        out = forward(params, cfg, qcfg, {"tokens": cur[:, None]},
+                      cache=cache, plan=plan)
+        new_cur = jnp.argmax(out["logits"][:, -1], -1).astype(jnp.int32)
+        new_state = {"cur": new_cur, "done": done, "counts": counts,
+                     "budget": state["budget"], "eos": state["eos"]}
+        return out["cache"], new_state, cur, emit
+
+    return slot_decode_step

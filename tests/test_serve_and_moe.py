@@ -57,7 +57,8 @@ def test_engine_generates_batched():
                       n_heads=4, n_kv_heads=2, d_ff=64, vocab=64, head_dim=8,
                       scan_layers=False, remat=False)
     p = init_model(jax.random.PRNGKey(0), cfg, permissive())
-    eng = Engine(cfg, permissive(), p, ServeConfig(slots=4, max_len=64))
+    eng = Engine(cfg, permissive(), p,
+                 ServeConfig(max_slots=4, max_len=64, prefill_chunk=8))
     outs = eng.generate([Request(prompt=[1, 2, 3], max_new_tokens=5),
                          Request(prompt=[7, 8], max_new_tokens=3)])
     assert len(outs) == 2 and len(outs[0]) == 5 and len(outs[1]) == 3
@@ -69,6 +70,33 @@ MOE_CFG = ModelConfig(
     d_ff=0, vocab=64, head_dim=8, scan_layers=False, remat=False,
     moe=MoEConfig(n_experts=4, top_k=2, n_shared=1, d_ff_expert=32,
                   capacity_factor=4.0))   # high capacity → no drops
+
+SSM_CFG = ModelConfig(
+    name="s", family="ssm", n_layers=2, d_model=32, n_heads=0, n_kv_heads=0,
+    d_ff=0, vocab=64, head_dim=8, tie_embeddings=True, scan_layers=False,
+    remat=False,
+    ssm=SSMConfig(d_state=8, d_conv=4, expand=2, head_dim=8, chunk=8))
+
+
+@pytest.mark.parametrize("cfg", [MOE_CFG, SSM_CFG], ids=["moe", "ssm"])
+def test_engine_from_artifact_parity_moe_ssm(cfg):
+    """Serving coverage beyond dense: the artifact path (from_artifact) must
+    produce the same tokens as the direct student-export constructor — for
+    both previously-untested families, with queueing over a small pool."""
+    qcfg = permissive()
+    p = init_model(jax.random.PRNGKey(0), cfg, qcfg)
+    scfg = ServeConfig(max_slots=2, max_len=48, prefill_chunk=8)
+    direct = Engine(cfg, qcfg, p, scfg)
+    via = Engine.from_artifact(
+        cfg, direct.plan, direct.exported,
+        ServeConfig(max_slots=2, max_len=48, prefill_chunk=8))
+    reqs = [Request(prompt=[1, 2, 3], max_new_tokens=5),
+            Request(prompt=[7, 8], max_new_tokens=3),
+            Request(prompt=[4, 5, 6, 7], max_new_tokens=4)]  # 3 reqs, 2 slots
+    a, b = direct.generate(reqs), via.generate(reqs)
+    assert a == b
+    assert [len(o) for o in a] == [5, 3, 4]
+    assert all(0 <= t < cfg.vocab_padded for o in a for t in o)
 
 
 def test_moe_sorted_matches_dense_dispatch():
