@@ -1,0 +1,202 @@
+"""Validate benchmark result files — the CI gate's assertion layer.
+
+Replaces the inline heredoc Python that used to live in ci.yml: the checks
+are importable (tests/test_bench_harness.py exercises them directly) and
+shared between the two serve gates.
+
+Two surfaces, both stdlib-only (no jax / no repro imports, so the gate
+runs even when the bench itself is what broke):
+
+- ``--serve <BENCH_serve.json>``: the continuous-vs-static smoke rows —
+  required keys present and the "continuous >= static" throughput bar.
+- ``--history <BENCH_history.jsonl>``: every ladder row is schema-valid,
+  and per (rung, trace) the newest sha's throughput has not regressed more
+  than ``--tol`` (default 25%) against the previous sha's last row.
+
+With no flags, checks whichever of the two default files exist (at least
+one must).  Exit 0 == all checks passed.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+SERVE_DEFAULT = RESULTS / "BENCH_serve.json"
+HISTORY_DEFAULT = RESULTS / "BENCH_history.jsonl"
+
+# BENCH_serve.json: row names + per-row required keys (the old heredoc)
+SERVE_ROWS = ("serve.static_batch", "serve.continuous",
+              "serve.continuous_vs_static")
+SERVE_KEYS = ("steps", "tokens", "tok_per_step", "mean_latency_steps",
+              "max_latency_steps")
+
+# BENCH_history.jsonl row schema: key -> allowed type(s).  Everything here
+# is step-counted / shape-derived and therefore machine-independent.
+HISTORY_SCHEMA: dict[str, type | tuple[type, ...]] = {
+    "schema": int,
+    "sha": str,
+    "rung": str,
+    "trace": str,
+    "mode": str,
+    "max_slots": int,
+    "max_len": int,
+    "prefill_chunk": int,
+    "n_requests": int,
+    "steps": int,
+    "tokens": int,
+    "tok_per_step": (int, float),
+    "p50_latency_steps": int,
+    "p95_latency_steps": int,
+    "p99_latency_steps": int,
+    "queue_depth_max": int,
+    "queue_depth_mean": (int, float),
+    "peak_live_buffer_bytes": int,
+}
+# the columns two same-sha runs must reproduce byte-identically (wall_s and
+# ts are informational and excluded)
+DETERMINISTIC_KEYS = tuple(HISTORY_SCHEMA)
+
+
+def validate_history_row(row: dict) -> list[str]:
+    """Schema + sanity errors for one history row ([] == valid)."""
+    if not isinstance(row, dict):
+        return [f"row is {type(row).__name__}, not an object"]
+    errs = []
+    for key, types in HISTORY_SCHEMA.items():
+        if key not in row:
+            errs.append(f"missing key {key!r}")
+        elif not isinstance(row[key], types) or isinstance(row[key], bool):
+            errs.append(f"key {key!r} has type {type(row[key]).__name__}, "
+                        f"want {types}")
+    if errs:
+        return errs
+    for key in ("steps", "tokens", "n_requests", "max_slots",
+                "peak_live_buffer_bytes"):
+        if row[key] <= 0:
+            errs.append(f"{key}={row[key]} must be > 0")
+    if row["tok_per_step"] <= 0:
+        errs.append(f"tok_per_step={row['tok_per_step']} must be > 0")
+    p50, p95, p99 = (row[f"p{q}_latency_steps"] for q in (50, 95, 99))
+    if not 0 <= p50 <= p95 <= p99:
+        errs.append(f"latency percentiles not monotone: {p50}/{p95}/{p99}")
+    if p99 > row["steps"]:
+        errs.append(f"p99={p99} exceeds total steps={row['steps']}")
+    return errs
+
+
+def load_history(path: pathlib.Path) -> tuple[list[dict], list[str]]:
+    rows, errs = [], []
+    for i, line in enumerate(path.read_text().splitlines(), 1):
+        if not line.strip():
+            continue
+        try:
+            rows.append(json.loads(line))
+        except json.JSONDecodeError as e:
+            errs.append(f"{path.name}:{i}: unparseable JSON line: {e}")
+    return rows, errs
+
+
+def check_history(path: pathlib.Path, tol: float = 0.25) -> list[str]:
+    """Validate every row, then the regression bar: for each (rung, trace),
+    the latest sha's last row must keep tok_per_step within ``tol`` of the
+    previous sha's last row.  Comparison is sha-to-sha (rows within one sha
+    are deterministic re-runs), in file append order."""
+    rows, errs = load_history(path)
+    if not rows and not errs:
+        return [f"{path.name}: no rows"]
+    for i, row in enumerate(rows, 1):
+        errs.extend(f"{path.name}:{i}: {e}" for e in validate_history_row(row))
+    if errs:
+        return errs
+    # last row per (rung, trace, sha), shas kept in first-append order
+    by_key: dict[tuple[str, str], dict[str, dict]] = {}
+    for row in rows:
+        by_key.setdefault((row["rung"], row["trace"]), {})[row["sha"]] = row
+    for (rung, trace), per_sha in by_key.items():
+        shas = list(per_sha)
+        if len(shas) < 2:
+            continue
+        prev, cur = per_sha[shas[-2]], per_sha[shas[-1]]
+        floor = prev["tok_per_step"] * (1.0 - tol)
+        if cur["tok_per_step"] < floor:
+            errs.append(
+                f"{path.name}: REGRESSION {rung}/{trace}: tok_per_step "
+                f"{cur['tok_per_step']} @ {cur['sha']} is more than "
+                f"{tol:.0%} below {prev['tok_per_step']} @ {prev['sha']}")
+    return errs
+
+
+def check_serve(path: pathlib.Path) -> list[str]:
+    """The former ci.yml heredoc: key presence + continuous >= static."""
+    try:
+        rows = {r["name"]: r for r in json.loads(path.read_text())}
+    except (json.JSONDecodeError, TypeError, KeyError) as e:
+        return [f"{path.name}: unparseable: {e}"]
+    errs = [f"{path.name}: missing row {name!r}"
+            for name in SERVE_ROWS if name not in rows]
+    if errs:
+        return errs
+    st, ct = rows["serve.static_batch"], rows["serve.continuous"]
+    for r in (st, ct):
+        errs.extend(f"{path.name}: row {r['name']!r} missing key {k!r}"
+                    for k in SERVE_KEYS if k not in r)
+    if errs:
+        return errs
+    if ct["tok_per_step"] < st["tok_per_step"]:
+        errs.append(f"{path.name}: continuous tok_per_step "
+                    f"{ct['tok_per_step']} < static {st['tok_per_step']}")
+    speedup = rows["serve.continuous_vs_static"].get("speedup")
+    if not isinstance(speedup, (int, float)) or speedup < 1.0:
+        errs.append(f"{path.name}: speedup {speedup!r} must be >= 1.0")
+    return errs
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
+    ap.add_argument("--serve", type=pathlib.Path, nargs="?",
+                    const=SERVE_DEFAULT, default=None,
+                    help=f"BENCH_serve.json to check (default {SERVE_DEFAULT})")
+    ap.add_argument("--history", type=pathlib.Path, nargs="?",
+                    const=HISTORY_DEFAULT, default=None,
+                    help="BENCH_history.jsonl to check "
+                         f"(default {HISTORY_DEFAULT})")
+    ap.add_argument("--tol", type=float, default=0.25,
+                    help="allowed sha-over-sha tok_per_step drop (0.25=25%%)")
+    args = ap.parse_args(argv)
+
+    targets: list[tuple[str, pathlib.Path]] = []
+    if args.serve is not None:
+        targets.append(("serve", args.serve))
+    if args.history is not None:
+        targets.append(("history", args.history))
+    if not targets:                                  # default: whatever exists
+        targets = [(kind, p) for kind, p in
+                   (("serve", SERVE_DEFAULT), ("history", HISTORY_DEFAULT))
+                   if p.exists()]
+        if not targets:
+            print(f"check_results: neither {SERVE_DEFAULT} nor "
+                  f"{HISTORY_DEFAULT} exists", file=sys.stderr)
+            return 1
+
+    errs = []
+    for kind, path in targets:
+        if not path.exists():
+            errs.append(f"{path}: does not exist")
+            continue
+        found = (check_serve(path) if kind == "serve"
+                 else check_history(path, tol=args.tol))
+        errs.extend(found)
+        if not found:
+            n = (len(load_history(path)[0]) if kind == "history" else
+                 len(SERVE_ROWS))
+            print(f"check_results: {path} OK ({kind}, {n} rows)")
+    for e in errs:
+        print(f"check_results: FAIL: {e}", file=sys.stderr)
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -12,6 +12,7 @@ from __future__ import annotations
 import functools
 import os
 import pathlib
+import subprocess
 import time
 
 import jax
@@ -27,6 +28,35 @@ RESULTS = pathlib.Path(__file__).resolve().parent / "results"
 RESULTS.mkdir(parents=True, exist_ok=True)
 
 FAST = os.environ.get("REPRO_BENCH_FAST", "1") == "1"
+
+
+def git_sha(short: bool = True) -> str:
+    """Current commit sha (keys BENCH_history.jsonl rows); 'unknown' when
+    not running inside a git checkout."""
+    cmd = ["git", "rev-parse"] + (["--short"] if short else []) + ["HEAD"]
+    try:
+        out = subprocess.run(cmd,
+                             cwd=pathlib.Path(__file__).resolve().parent,
+                             check=True, capture_output=True, text=True,
+                             timeout=10)
+        return out.stdout.strip() or "unknown"
+    except Exception:  # noqa: BLE001 — no git, detached worktree, etc.
+        return "unknown"
+
+
+def percentile_steps(values, q: float) -> int:
+    """Nearest-rank percentile of integer step counts.
+
+    Deterministic and interpolation-free (numpy changed its default
+    interpolation across versions; history rows must not depend on it).
+    """
+    if not 0.0 < q <= 1.0:
+        raise ValueError(f"q must be in (0, 1], got {q}")
+    vs = sorted(values)
+    if not vs:
+        raise ValueError("percentile of empty sequence")
+    rank = max(1, -(-round(q * 100) * len(vs) // 100))  # ceil(q*n), 1-based
+    return int(vs[rank - 1])
 
 
 # ---------------------------------------------------------------- CNN fixture

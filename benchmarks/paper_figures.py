@@ -6,20 +6,17 @@ paper's qualitative claim, recorded in EXPERIMENTS.md.
 """
 from __future__ import annotations
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.paper_cnn import CONFIG as CNN_CFG
-from repro.core import (QuantConfig, Granularity, backbone_l2,
+from repro.core import (Granularity, backbone_l2,
                         deployment_oriented, mmse_ch, mmse_dch, mmse_grp,
                         mmse_lw,
                         permissive)
-from repro.models import forward
 from repro.models.cnn import (apq_init_qconv, forward_cnn, init_cnn,
-                              mmse_init_qconv, qconv)
+                              mmse_init_qconv)
 from repro.train.qft_trainer import QFTConfig, QFTTrainer
 from repro.data.calib import CalibConfig, CalibDataset
 

@@ -177,10 +177,24 @@ def _serve_bench(smoke: bool = False) -> list[dict]:
     return rows
 
 
+def _serve_ladder_bench() -> list[dict]:
+    """The scale-ladder serve bench (FAST-gated rung selection), appending
+    its rows to the tracked benchmarks/results/BENCH_history.jsonl.  The
+    returned display rows are decorated with name/us_per_call/derived for
+    the CSV output; the appended history rows stay clean."""
+    from .serve_ladder import run as ladder_run
+    return [{"name": f"serve.ladder.{r['rung']}.{r['trace']}",
+             "us_per_call": r["wall_s"] * 1e6,
+             "derived": (f"{r['tok_per_step']}tok/step;"
+                         f"p95={r['p95_latency_steps']}steps"),
+             **r}
+            for r in ladder_run()]
+
+
 def _kernel_timings() -> list[dict]:
     """µs/call for the three Pallas kernels (interpret) vs jnp oracles."""
     from repro.core.fakequant import pack_int4
-    from repro.kernels import quant_matmul, flash_attention
+    from repro.kernels import quant_matmul
     from repro.kernels import ref
     from .common import timed
     key = jax.random.PRNGKey(0)
@@ -201,19 +215,10 @@ def _kernel_timings() -> list[dict]:
     return rows
 
 
-def main() -> None:
-    import sys
-    if "--serve-smoke" in sys.argv:
-        # CI entry: just the serving bench → BENCH_serve.json (fast)
-        print("name,us_per_call,derived")
-        for r in _serve_bench(smoke=True):
-            print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
-        return
+def _benches() -> list[tuple]:
+    """Name -> callable registry (module-level so tests can monkeypatch)."""
     from . import paper_figures as F
-    from . import roofline
-    t_all = time.time()
-    all_rows: list[dict] = []
-    benches = [
+    return [
         ("fig3_mmse_granularity", F.fig3_mmse_granularity),
         ("table2_no_qft", F.table2_no_qft),
         ("table1_qft_vs_baselines", F.table1_qft_vs_baselines),
@@ -226,9 +231,31 @@ def main() -> None:
         ("quant_matmul_layouts", _quant_matmul_layout_bench),
         ("deploy_export", _deploy_export_bench),
         ("serve_continuous_batching", _serve_bench),
+        ("serve_ladder", _serve_ladder_bench),
     ]
+
+
+def main(argv: list[str] | None = None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--serve-smoke", action="store_true",
+                    help="CI entry: just the serving bench -> "
+                         "BENCH_serve.json (fast)")
+    ap.add_argument("--allow-errors", action="store_true",
+                    help="print ERROR rows but still exit 0 (the pre-gate "
+                         "behavior; CI runs without it so errors are red)")
+    args = ap.parse_args(argv)
+    if args.serve_smoke:
+        print("name,us_per_call,derived")
+        for r in _serve_bench(smoke=True):
+            print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+        return 0
+    from . import roofline
+    t_all = time.time()
+    all_rows: list[dict] = []
+    errors: list[str] = []
     print("name,us_per_call,derived")
-    for name, fn in benches:
+    for name, fn in _benches():
         t0 = time.time()
         try:
             rows = fn()
@@ -244,6 +271,7 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001
             print(f"{name},0,ERROR:{type(e).__name__}:{e}")
             traceback.print_exc()
+            errors.append(name)
     # roofline summary (from dry-run artifacts, if present)
     try:
         rl = roofline.table()
@@ -255,11 +283,17 @@ def main() -> None:
         all_rows.extend(rl)
     except Exception as e:  # noqa: BLE001
         print(f"roofline,0,ERROR:{e}")
+        errors.append("roofline")
     out = pathlib.Path(__file__).resolve().parent / "results" / "bench_rows.json"
     out.parent.mkdir(parents=True, exist_ok=True)
     out.write_text(json.dumps(all_rows, indent=1, default=str))
     print(f"# total {time.time()-t_all:.1f}s; rows -> {out}")
+    if errors:
+        print(f"# {len(errors)} bench(es) errored: {', '.join(errors)}")
+        if not args.allow_errors:
+            return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

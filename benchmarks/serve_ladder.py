@@ -1,0 +1,243 @@
+"""Scale-ladder serve benchmark with an append-only tracked history.
+
+A declared ladder of scale rungs (slot pool x request count x length mix,
+small -> large) is benched under three arrival traces (``benchmarks/
+traces.py``: poisson / bursty / longtail).  Every (rung, trace) run
+produces ONE row — throughput in tokens per scheduler step, p50/p95/p99
+request latency in steps, queue depth, and the engine's peak live-buffer
+bytes from ``Engine.stats()`` — and the row is APPENDED to
+``benchmarks/results/BENCH_history.jsonl`` keyed by (git sha, rung,
+trace).  The file is append-only and tracked in git: every perf PR shows a
+trajectory, not one overwritten smoke number.
+
+All metrics are step-counted (1 step == one ``Engine.step`` tick), never
+wall-clock, so rows are deterministic and machine-independent — two runs
+at the same sha append byte-identical metric columns (``wall_s``/``ts``
+are informational only; see check_results.DETERMINISTIC_KEYS).
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.serve_ladder --smoke   # 2 rungs, CI
+    PYTHONPATH=src python -m benchmarks.serve_ladder           # FAST-gated
+    REPRO_BENCH_FAST=0 PYTHONPATH=src python -m benchmarks.serve_ladder
+
+Validate / regression-check the history with
+``python -m benchmarks.check_results --history``.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import datetime
+import json
+import pathlib
+import time
+import zlib
+
+from .common import FAST, RESULTS, git_sha, percentile_steps
+from .traces import TRACE_KINDS, make_trace
+
+SCHEMA_VERSION = 1
+HISTORY = RESULTS / "BENCH_history.jsonl"
+
+
+@dataclasses.dataclass(frozen=True)
+class Rung:
+    """One scale point: the serve config + workload envelope benched at it.
+
+    ``prompt_lens`` is a small fixed menu (not a range) so chunked prefill
+    compiles a handful of remainder shapes instead of one per length.
+    """
+    name: str
+    max_slots: int
+    n_requests: int
+    max_len: int
+    prefill_chunk: int
+    prompt_lens: tuple[int, ...]
+    gen_lo: int
+    gen_hi: int
+
+
+# Small -> large.  xs/s are the CI smoke rungs (--smoke); the default local
+# run adds m; REPRO_BENCH_FAST=0 runs the full ladder including l.
+LADDER = (
+    Rung("xs", max_slots=2, n_requests=8, max_len=64, prefill_chunk=8,
+         prompt_lens=(3, 5, 8), gen_lo=4, gen_hi=10),
+    Rung("s", max_slots=4, n_requests=16, max_len=96, prefill_chunk=8,
+         prompt_lens=(3, 5, 8, 13), gen_lo=4, gen_hi=16),
+    Rung("m", max_slots=8, n_requests=48, max_len=128, prefill_chunk=16,
+         prompt_lens=(5, 8, 13, 21), gen_lo=6, gen_hi=20),
+    Rung("l", max_slots=16, n_requests=128, max_len=192, prefill_chunk=16,
+         prompt_lens=(5, 8, 13, 21, 34), gen_lo=8, gen_hi=24),
+)
+SMOKE_RUNGS = 2
+
+
+def select_rungs(smoke: bool = False) -> tuple[Rung, ...]:
+    if smoke:
+        return LADDER[:SMOKE_RUNGS]
+    return LADDER[:3] if FAST else LADDER
+
+
+def trace_seed(rung: Rung, kind: str) -> int:
+    """Stable per-(rung, trace) seed — crc32, not hash() (PYTHONHASHSEED)."""
+    return zlib.crc32(f"{kind}/{rung.name}".encode()) % (2 ** 31)
+
+
+def _bench_model():
+    """Tiny dense LM shared by every rung: the ladder measures the *serve
+    engine's* scheduling/batching behavior, which is model-size-invariant
+    in step-counted metrics; a fixed model keeps jit cost bounded."""
+    import jax
+    from repro.core import permissive
+    from repro.models import ModelConfig, init_model
+    cfg = ModelConfig(name="ladder-bench", family="dense", n_layers=2,
+                      d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                      vocab=128, head_dim=16, scan_layers=False, remat=False)
+    params = init_model(jax.random.PRNGKey(0), cfg, permissive())
+    return cfg, params
+
+
+def bench_rung(rung: Rung, trace_kind: str, *, cfg=None, params=None,
+               sha: str | None = None) -> dict:
+    """Serve one (rung, trace) workload to completion; return a history row.
+
+    Continuous batching only — the static-wave comparison lives in
+    run.py's ``--serve-smoke`` (BENCH_serve.json); the ladder tracks the
+    shipped engine's trajectory across scales.
+    """
+    import numpy as np
+    from repro.core import permissive
+    from repro.serve.engine import Engine, Request, ServeConfig
+
+    if cfg is None or params is None:
+        cfg, params = _bench_model()
+    seed = trace_seed(rung, trace_kind)
+    trace = make_trace(trace_kind, rung.n_requests, seed,
+                       prompt_lens=rung.prompt_lens, gen_lo=rung.gen_lo,
+                       gen_hi=rung.gen_hi, max_len=rung.max_len)
+    scfg = ServeConfig(max_slots=rung.max_slots, max_len=rung.max_len,
+                       prefill_chunk=rung.prefill_chunk)
+    engine = Engine(cfg, permissive(), params, scfg)
+    tok_rng = np.random.RandomState(seed + 1)
+    reqs = [Request(prompt=[int(t) for t in
+                            tok_rng.randint(1, cfg.vocab, it.prompt_len)],
+                    max_new_tokens=it.new_tokens)    # eos=-1: budget-driven
+            for it in trace]
+
+    t0 = time.time()
+    tick, nxt = 0, 0
+    rmap: dict[int, int] = {}                        # rid -> trace index
+    done_at: dict[int, int] = {}
+    qdepth: list[int] = []
+    while nxt < len(trace) or engine.pending():
+        while nxt < len(trace) and trace[nxt].arrival <= tick:
+            rmap[engine.submit(reqs[nxt])] = nxt
+            nxt += 1
+        qdepth.append(engine.stats()["queue_depth"])  # pre-step backlog
+        if engine.pending():
+            for rid in engine.step():
+                done_at[rmap[rid]] = tick
+        tick += 1
+    wall = time.time() - t0
+
+    stats = engine.stats()
+    lat = sorted(done_at[i] - trace[i].arrival for i in range(len(trace)))
+    tokens = sum(it.new_tokens for it in trace)
+    return {
+        "schema": SCHEMA_VERSION,
+        "sha": sha if sha is not None else git_sha(),
+        "rung": rung.name,
+        "trace": trace_kind,
+        "mode": "continuous",
+        "max_slots": rung.max_slots,
+        "max_len": rung.max_len,
+        "prefill_chunk": rung.prefill_chunk,
+        "n_requests": rung.n_requests,
+        "steps": tick,
+        "tokens": tokens,
+        "tok_per_step": round(tokens / tick, 4),
+        "p50_latency_steps": percentile_steps(lat, 0.50),
+        "p95_latency_steps": percentile_steps(lat, 0.95),
+        "p99_latency_steps": percentile_steps(lat, 0.99),
+        "queue_depth_max": max(qdepth),
+        "queue_depth_mean": round(sum(qdepth) / len(qdepth), 2),
+        "peak_live_buffer_bytes": stats["peak_live_bytes"],
+        # informational, machine-dependent — excluded from determinism and
+        # regression comparisons (check_results.DETERMINISTIC_KEYS)
+        "wall_s": round(wall, 3),
+        "ts": datetime.datetime.now(datetime.timezone.utc)
+                               .strftime("%Y-%m-%dT%H:%M:%SZ"),
+    }
+
+
+def append_history(rows: list[dict],
+                   path: pathlib.Path = HISTORY) -> pathlib.Path:
+    """Append rows as JSON lines.  APPEND-ONLY by construction: the file is
+    opened in mode 'a' and existing rows are never read, rewritten, or
+    deduplicated — re-runs at the same sha add rows (identical in their
+    step-counted columns), and regressions stay visible forever."""
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "a") as f:
+        for row in rows:
+            f.write(json.dumps(row, sort_keys=True) + "\n")
+    return path
+
+
+def run(smoke: bool = False, rungs: tuple[Rung, ...] | None = None,
+        traces: tuple[str, ...] = TRACE_KINDS, append: bool = True,
+        history: pathlib.Path = HISTORY) -> list[dict]:
+    """Bench the selected ladder; append to the history; return the rows."""
+    if rungs is None:
+        rungs = select_rungs(smoke)
+    cfg, params = _bench_model()
+    sha = git_sha()
+    rows = [bench_rung(rung, kind, cfg=cfg, params=params, sha=sha)
+            for rung in rungs for kind in traces]
+    if append:
+        append_history(rows, history)
+    return rows
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help=f"run only the {SMOKE_RUNGS} smallest rungs (CI)")
+    ap.add_argument("--rungs", default=None,
+                    help="comma-separated rung names (default: FAST-gated)")
+    ap.add_argument("--traces", default=",".join(TRACE_KINDS),
+                    help=f"comma-separated trace kinds from {TRACE_KINDS}")
+    ap.add_argument("--history", type=pathlib.Path, default=HISTORY,
+                    help="history file to append to")
+    ap.add_argument("--no-append", action="store_true",
+                    help="print rows without touching the history")
+    args = ap.parse_args(argv)
+
+    rungs = None
+    if args.rungs:
+        by_name = {r.name: r for r in LADDER}
+        try:
+            rungs = tuple(by_name[n] for n in args.rungs.split(","))
+        except KeyError as e:
+            ap.error(f"unknown rung {e.args[0]!r}; have {sorted(by_name)}")
+    traces = tuple(args.traces.split(","))
+    for t in traces:
+        if t not in TRACE_KINDS:
+            ap.error(f"unknown trace {t!r}; have {TRACE_KINDS}")
+
+    rows = run(smoke=args.smoke, rungs=rungs, traces=traces,
+               append=not args.no_append, history=args.history)
+    print("rung,trace,tok_per_step,p50,p95,p99,queue_max,peak_mb,steps")
+    for r in rows:
+        print(f"{r['rung']},{r['trace']},{r['tok_per_step']},"
+              f"{r['p50_latency_steps']},{r['p95_latency_steps']},"
+              f"{r['p99_latency_steps']},{r['queue_depth_max']},"
+              f"{r['peak_live_buffer_bytes'] / 1e6:.2f},{r['steps']}")
+    if not args.no_append:
+        print(f"# appended {len(rows)} rows @ {rows[0]['sha']} "
+              f"-> {args.history}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

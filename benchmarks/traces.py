@@ -1,0 +1,126 @@
+"""Deterministic arrival-trace generators for the serve scale ladder.
+
+A trace is a list of :class:`TraceItem` — (arrival tick, prompt length,
+generation budget) — consumed by ``benchmarks/serve_ladder.py``.  Three
+workload shapes, modeled on what a production LM endpoint actually sees:
+
+- ``poisson``  — memoryless arrivals (the classic open-loop load model);
+- ``bursty``   — on/off arrivals: a burst of near-simultaneous requests,
+  then a quiet gap (traffic behind a retrying client or a cron fanout);
+- ``longtail`` — Poisson arrivals, but the *length* distribution is heavy
+  tailed: mostly short chats plus a few long-prompt / long-generation
+  requests (the slot-hostage workload continuous batching exists for).
+
+Everything is seeded through ``numpy.random.RandomState`` (the frozen
+legacy generator, stable across numpy versions) and expressed in scheduler
+ticks, never wall-clock — so the same (kind, n, seed, limits) tuple yields
+the identical trace on every machine, and downstream benchmark rows are
+machine-independent.  Prompt lengths are drawn from a small fixed menu so
+the engine's chunked prefill compiles only a handful of remainder shapes.
+
+This module is pure numpy on purpose: no repro imports, so schema tests
+and CI validation can import it without building a model.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceItem:
+    arrival: int          # scheduler tick the request becomes visible
+    prompt_len: int       # tokens in the prompt
+    new_tokens: int       # generation budget (eos disabled in the bench)
+
+
+def _clip_gen(plen: int, gen: int, max_len: int) -> int:
+    """Generation budget must fit the slot: 1 <= gen <= max_len - plen."""
+    return max(1, min(int(gen), max_len - int(plen)))
+
+
+def _uniform_lengths(rng: np.random.RandomState, n: int,
+                     prompt_lens: tuple[int, ...], gen_lo: int, gen_hi: int,
+                     max_len: int) -> list[tuple[int, int]]:
+    plens = rng.choice(np.asarray(prompt_lens), n)
+    gens = rng.randint(gen_lo, gen_hi + 1, n)
+    return [(int(p), _clip_gen(p, g, max_len)) for p, g in zip(plens, gens)]
+
+
+def poisson_trace(n_requests: int, seed: int, *, prompt_lens: tuple[int, ...],
+                  gen_lo: int, gen_hi: int, max_len: int,
+                  lam: float = 2.0) -> list[TraceItem]:
+    """Memoryless arrivals: inter-arrival gaps ~ Poisson(lam) ticks."""
+    rng = np.random.RandomState(seed)
+    arrivals = np.cumsum(rng.poisson(lam, n_requests))
+    lengths = _uniform_lengths(rng, n_requests, prompt_lens, gen_lo, gen_hi,
+                               max_len)
+    return [TraceItem(int(a), p, g) for a, (p, g) in zip(arrivals, lengths)]
+
+
+def bursty_trace(n_requests: int, seed: int, *, prompt_lens: tuple[int, ...],
+                 gen_lo: int, gen_hi: int, max_len: int,
+                 burst_lo: int = 2, burst_hi: int = 6, gap_lo: int = 6,
+                 gap_hi: int = 15) -> list[TraceItem]:
+    """On/off arrivals: bursts of 2-6 requests landing on one tick,
+    separated by idle gaps — the queue fills, drains, fills again."""
+    rng = np.random.RandomState(seed)
+    arrivals: list[int] = []
+    t = 0
+    while len(arrivals) < n_requests:
+        burst = int(rng.randint(burst_lo, burst_hi + 1))
+        arrivals.extend([t] * min(burst, n_requests - len(arrivals)))
+        t += int(rng.randint(gap_lo, gap_hi + 1))
+    lengths = _uniform_lengths(rng, n_requests, prompt_lens, gen_lo, gen_hi,
+                               max_len)
+    return [TraceItem(a, p, g) for a, (p, g) in zip(arrivals, lengths)]
+
+
+def longtail_trace(n_requests: int, seed: int, *,
+                   prompt_lens: tuple[int, ...], gen_lo: int, gen_hi: int,
+                   max_len: int, lam: float = 3.0,
+                   tail_frac: float = 0.15) -> list[TraceItem]:
+    """Poisson arrivals with a heavy-tailed length mix: ~85% short requests
+    (shortest two menu prompts, small budgets), ~15% tail requests (longest
+    menu prompt, 3x generation budget, clipped to the slot)."""
+    rng = np.random.RandomState(seed)
+    arrivals = np.cumsum(rng.poisson(lam, n_requests))
+    short_menu = tuple(sorted(prompt_lens))[:2]
+    tail_plen = max(prompt_lens)
+    is_tail = rng.rand(n_requests) < tail_frac
+    plens = rng.choice(np.asarray(short_menu), n_requests)
+    gens = rng.randint(gen_lo, gen_hi + 1, n_requests)
+    items = []
+    for a, tail, p, g in zip(arrivals, is_tail, plens, gens):
+        if tail:
+            p, g = tail_plen, 3 * gen_hi
+        items.append(TraceItem(int(a), int(p), _clip_gen(p, g, max_len)))
+    return items
+
+
+TRACES = {
+    "poisson": poisson_trace,
+    "bursty": bursty_trace,
+    "longtail": longtail_trace,
+}
+TRACE_KINDS = tuple(TRACES)
+
+
+def make_trace(kind: str, n_requests: int, seed: int, *,
+               prompt_lens: tuple[int, ...], gen_lo: int, gen_hi: int,
+               max_len: int) -> list[TraceItem]:
+    """Generate a named trace; validates the invariants every consumer
+    relies on (sorted arrivals, budgets that fit the slot)."""
+    if kind not in TRACES:
+        raise ValueError(f"unknown trace kind {kind!r}; have {TRACE_KINDS}")
+    if min(prompt_lens) < 1 or max(prompt_lens) >= max_len:
+        raise ValueError(f"prompt_lens {prompt_lens} must lie in "
+                         f"[1, max_len={max_len})")
+    items = TRACES[kind](n_requests, seed, prompt_lens=tuple(prompt_lens),
+                         gen_lo=gen_lo, gen_hi=gen_hi, max_len=max_len)
+    assert len(items) == n_requests
+    assert all(b.arrival >= a.arrival for a, b in zip(items, items[1:]))
+    assert all(1 <= it.new_tokens
+               and it.prompt_len + it.new_tokens <= max_len for it in items)
+    return items

@@ -23,6 +23,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -53,6 +54,14 @@ class ServeConfig:
     def __post_init__(self, slots):
         if slots is not None:
             self.max_slots = slots
+
+
+def _tree_bytes(tree) -> int:
+    """Byte size of every array leaf, from shape/dtype metadata only — no
+    device sync, works on concrete arrays and eval_shape structs alike."""
+    return sum(math.prod(leaf.shape) * jnp.dtype(leaf.dtype).itemsize
+               for leaf in jax.tree_util.tree_leaves(tree)
+               if hasattr(leaf, "shape") and hasattr(leaf, "dtype"))
 
 
 class Scheduler:
@@ -194,6 +203,14 @@ class Engine:
         self.params = jax.jit(lambda e: deploy_view(e, plan))(exported)
         self.exported = exported
         self._prefill, self._decode = _serve_steps(cfg)
+        # live-buffer accounting (stats()): everything is sized from array
+        # shapes+dtypes, so the numbers are machine-independent and cost no
+        # device sync.  The per-prefill batch-1 cache is sized via
+        # eval_shape — no throwaway allocation.
+        self._params_bytes = _tree_bytes(self.params)
+        self._artifact_bytes = _tree_bytes(exported)
+        self._prefill_slot_bytes = _tree_bytes(
+            jax.eval_shape(lambda: init_cache(cfg, 1, self.scfg.max_len)))
         self.reset()
 
     # ------------------------------------------------------------ lifecycle
@@ -214,6 +231,40 @@ class Engine:
         self._collected: dict[int, list[int]] = {}  # finished, drained by a
                                                     # foreign generate() call
         self._work: dict[int, int] = {}           # rid -> step-count estimate
+        self._cache_bytes = _tree_bytes(self.cache) + _tree_bytes(self.state)
+        self._peak_live_bytes = (self._params_bytes + self._artifact_bytes
+                                 + self._cache_bytes)
+
+    # ---------------------------------------------------------- accounting
+    def _live_bytes(self) -> int:
+        return (self._params_bytes + self._artifact_bytes + self._cache_bytes
+                + len(self._prefilling) * self._prefill_slot_bytes)
+
+    def stats(self) -> dict[str, int]:
+        """Cheap accounting snapshot for benchmarks and ops dashboards.
+
+        Buffer sizes are computed from array shapes/dtypes (params + the
+        exported artifact the engine retains + the slot cache & decode
+        state + one batch-1 cache per prefilling slot) rather than sampled
+        from the OS — deterministic across machines, which is what lets
+        ``peak_live_bytes`` live in the tracked benchmark history.
+        ``peak_live_bytes`` is high-watermarked at every step() (prefill
+        concurrency is the only dynamic term; everything else is fixed at
+        reset()).
+        """
+        live = self._live_bytes()
+        return {
+            "params_bytes": self._params_bytes,
+            "artifact_bytes": self._artifact_bytes,
+            "slot_cache_bytes": self._cache_bytes,
+            "prefill_bytes": len(self._prefilling) * self._prefill_slot_bytes,
+            "live_bytes": live,
+            "peak_live_bytes": max(self._peak_live_bytes, live),
+            "queue_depth": len(self.sched.queue),
+            "slots_active": len(self._alive),
+            "slots_prefilling": len(self._prefilling),
+            "max_slots": self.scfg.max_slots,
+        }
 
     # ------------------------------------------------------------ serve API
     def _validate(self, request: Request) -> None:
@@ -269,6 +320,8 @@ class Engine:
             self._prefilling[slot] = {
                 "req": req, "off": 0,
                 "cache": init_cache(self.cfg, 1, scfg.max_len)}
+        # prefill concurrency peaks right after admission, before installs
+        self._peak_live_bytes = max(self._peak_live_bytes, self._live_bytes())
 
         for slot in sorted(self._prefilling):
             st = self._prefilling[slot]

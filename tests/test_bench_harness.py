@@ -1,0 +1,265 @@
+"""Bench-harness tier: the scale-ladder serve benchmark is itself tested.
+
+The ladder's value rests on three properties, each enforced here:
+
+- **determinism** — trace generators and step-counted rung metrics are
+  seeded and machine-independent, so two runs at one sha append identical
+  metric columns (the append-only history stays meaningful);
+- **schema discipline** — rows a rung produces pass
+  ``benchmarks.check_results`` validation, and malformed / regressed rows
+  are rejected (the CI gate actually gates);
+- **append-only** — appending twice yields two rows, never a clobber.
+
+Plus the run.py failure-propagation satellite: an errored bench makes
+``benchmarks.run`` exit nonzero unless ``--allow-errors``.
+"""
+import json
+
+import pytest
+
+from benchmarks import check_results
+from benchmarks.common import percentile_steps
+from benchmarks.serve_ladder import (LADDER, Rung, append_history,
+                                     bench_rung, select_rungs, trace_seed)
+from benchmarks.traces import TRACE_KINDS, make_trace
+
+KW = dict(prompt_lens=(3, 5, 8), gen_lo=4, gen_hi=10, max_len=64)
+
+
+# ------------------------------------------------------------------- traces
+
+@pytest.mark.parametrize("kind", TRACE_KINDS)
+def test_trace_seeded_deterministic(kind):
+    a = make_trace(kind, 32, seed=7, **KW)
+    b = make_trace(kind, 32, seed=7, **KW)
+    assert a == b
+    c = make_trace(kind, 32, seed=8, **KW)
+    assert a != c
+
+
+@pytest.mark.parametrize("kind", TRACE_KINDS)
+def test_trace_invariants(kind):
+    items = make_trace(kind, 64, seed=3, **KW)
+    assert len(items) == 64
+    assert all(x.arrival <= y.arrival for x, y in zip(items, items[1:]))
+    for it in items:
+        assert it.prompt_len >= 1
+        assert it.new_tokens >= 1
+        assert it.prompt_len + it.new_tokens <= KW["max_len"]
+
+
+def test_trace_kinds_distinct():
+    """The three workload shapes are actually different workloads."""
+    traces = {k: make_trace(k, 48, seed=1, **KW) for k in TRACE_KINDS}
+    arrivals = {k: tuple(it.arrival for it in v) for k, v in traces.items()}
+    assert len(set(arrivals.values())) == len(TRACE_KINDS)
+    # bursty: at least one tick receives a multi-request burst
+    burst = arrivals["bursty"]
+    assert any(burst.count(t) >= 2 for t in set(burst))
+    # longtail: contains tail requests bigger than the uniform menu allows
+    assert max(it.new_tokens for it in traces["longtail"]) > KW["gen_hi"]
+
+
+def test_trace_unknown_kind_rejected():
+    with pytest.raises(ValueError, match="unknown trace kind"):
+        make_trace("uniform", 4, seed=0, **KW)
+
+
+def test_percentile_nearest_rank():
+    vs = list(range(1, 101))
+    assert percentile_steps(vs, 0.50) == 50
+    assert percentile_steps(vs, 0.95) == 95
+    assert percentile_steps(vs, 0.99) == 99
+    assert percentile_steps(vs, 1.0) == 100
+    assert percentile_steps([42], 0.5) == 42
+    with pytest.raises(ValueError):
+        percentile_steps([], 0.5)
+
+
+# ----------------------------------------------------------- ladder + rungs
+
+def test_ladder_declares_small_to_large():
+    assert [r.max_slots for r in LADDER] == sorted(r.max_slots for r in LADDER)
+    assert len(select_rungs(smoke=True)) == 2
+    assert select_rungs(smoke=True) == LADDER[:2]
+    for r in LADDER:
+        assert max(r.prompt_lens) + r.gen_hi <= r.max_len
+    # per-(rung, trace) seeds are stable and distinct
+    seeds = {trace_seed(r, k) for r in LADDER for k in TRACE_KINDS}
+    assert len(seeds) == len(LADDER) * len(TRACE_KINDS)
+
+
+TINY = Rung("tiny", max_slots=2, n_requests=4, max_len=48, prefill_chunk=8,
+            prompt_lens=(3, 5), gen_lo=3, gen_hi=6)
+
+
+def test_rung_rows_schema_valid_and_deterministic():
+    """A rung run produces check_results-valid rows, and the step-counted
+    columns are identical across runs (machine-independence proxy)."""
+    r1 = bench_rung(TINY, "poisson", sha="testsha")
+    r2 = bench_rung(TINY, "poisson", sha="testsha")
+    assert check_results.validate_history_row(r1) == []
+    d1 = {k: r1[k] for k in check_results.DETERMINISTIC_KEYS}
+    d2 = {k: r2[k] for k in check_results.DETERMINISTIC_KEYS}
+    assert d1 == d2
+    assert r1["tokens"] == sum(
+        it.new_tokens for it in make_trace(
+            "poisson", TINY.n_requests, trace_seed(TINY, "poisson"),
+            prompt_lens=TINY.prompt_lens, gen_lo=TINY.gen_lo,
+            gen_hi=TINY.gen_hi, max_len=TINY.max_len))
+    assert r1["peak_live_buffer_bytes"] > 0
+
+
+@pytest.mark.slow
+def test_smoke_rungs_all_traces():
+    """The CI smoke surface end to end: both smoke rungs x all traces."""
+    for rung in select_rungs(smoke=True):
+        for kind in TRACE_KINDS:
+            row = bench_rung(rung, kind, sha="testsha")
+            assert check_results.validate_history_row(row) == [], row
+
+
+def test_append_history_never_clobbers(tmp_path):
+    path = tmp_path / "hist.jsonl"
+    row = bench_rung(TINY, "bursty", sha="testsha")
+    append_history([row], path)
+    append_history([row], path)
+    lines = path.read_text().splitlines()
+    assert len(lines) == 2
+    assert json.loads(lines[0]) == json.loads(lines[1]) == row
+    assert check_results.check_history(path) == []
+
+
+# ------------------------------------------------------------ check_results
+
+def _fake_row(**over):
+    row = {"schema": 1, "sha": "aaaaaaa", "rung": "xs", "trace": "poisson",
+           "mode": "continuous", "max_slots": 2, "max_len": 64,
+           "prefill_chunk": 8, "n_requests": 8, "steps": 30, "tokens": 60,
+           "tok_per_step": 2.0, "p50_latency_steps": 10,
+           "p95_latency_steps": 20, "p99_latency_steps": 25,
+           "queue_depth_max": 4, "queue_depth_mean": 1.5,
+           "peak_live_buffer_bytes": 123456}
+    row.update(over)
+    return row
+
+
+def test_validate_rejects_malformed_rows():
+    assert check_results.validate_history_row(_fake_row()) == []
+    bad = _fake_row()
+    del bad["tok_per_step"]
+    assert any("tok_per_step" in e
+               for e in check_results.validate_history_row(bad))
+    assert check_results.validate_history_row(_fake_row(steps="thirty"))
+    assert check_results.validate_history_row(_fake_row(tok_per_step=-1.0))
+    assert check_results.validate_history_row(
+        _fake_row(p95_latency_steps=5))          # percentiles not monotone
+    assert check_results.validate_history_row([1, 2])
+
+
+def _write_history(path, rows):
+    path.write_text("".join(json.dumps(r) + "\n" for r in rows))
+
+
+def test_check_history_regression_gate(tmp_path):
+    path = tmp_path / "h.jsonl"
+    old = _fake_row(sha="aaaaaaa", tok_per_step=2.0)
+    # within tolerance: 20% drop passes the default 25% bar
+    _write_history(path, [old, _fake_row(sha="bbbbbbb", tok_per_step=1.6)])
+    assert check_results.check_history(path) == []
+    # beyond tolerance: fails, and names the rung/trace/shas
+    _write_history(path, [old, _fake_row(sha="bbbbbbb", tok_per_step=1.0)])
+    errs = check_results.check_history(path)
+    assert errs and "REGRESSION" in errs[0] and "xs/poisson" in errs[0]
+    # a second same-sha append is NOT compared against itself
+    _write_history(path, [old, old])
+    assert check_results.check_history(path) == []
+    # unparseable line -> error, empty file -> error
+    path.write_text("not json\n")
+    assert check_results.check_history(path)
+    path.write_text("")
+    assert check_results.check_history(path)
+
+
+def test_check_serve(tmp_path):
+    path = tmp_path / "BENCH_serve.json"
+    base = {"steps": 10, "tokens": 20, "tok_per_step": 2.0,
+            "mean_latency_steps": 5.0, "max_latency_steps": 9}
+    rows = [dict(base, name="serve.static_batch", tok_per_step=1.5),
+            dict(base, name="serve.continuous"),
+            {"name": "serve.continuous_vs_static", "speedup": 1.33}]
+    path.write_text(json.dumps(rows))
+    assert check_results.check_serve(path) == []
+    # continuous slower than static -> fail
+    bad = [dict(rows[0], tok_per_step=3.0), rows[1], rows[2]]
+    path.write_text(json.dumps(bad))
+    assert any("continuous" in e for e in check_results.check_serve(path))
+    # missing row -> fail
+    path.write_text(json.dumps(rows[:2]))
+    assert check_results.check_serve(path)
+
+
+def test_check_results_cli(tmp_path):
+    path = tmp_path / "h.jsonl"
+    _write_history(path, [_fake_row()])
+    assert check_results.main(["--history", str(path)]) == 0
+    _write_history(path, [_fake_row(tok_per_step=-1.0)])
+    assert check_results.main(["--history", str(path)]) == 1
+    assert check_results.main(["--history", str(tmp_path / "nope.jsonl")]) == 1
+
+
+# ------------------------------------------------------- run.py error gate
+
+def test_run_main_propagates_bench_errors(monkeypatch, capsys):
+    from benchmarks import run as bench_run
+
+    def boom():
+        raise RuntimeError("synthetic bench failure")
+
+    monkeypatch.setattr(bench_run, "_benches", lambda: [("boom", boom)])
+    assert bench_run.main([]) == 1
+    assert "ERROR:RuntimeError" in capsys.readouterr().out
+    assert bench_run.main(["--allow-errors"]) == 0
+
+
+# --------------------------------------------------------- Engine.stats()
+
+def test_engine_stats_accounting():
+    import jax
+    from repro.core import permissive
+    from repro.models import ModelConfig, init_model
+    from repro.serve.engine import Engine, Request, ServeConfig
+
+    cfg = ModelConfig(name="stats-t", family="dense", n_layers=2, d_model=32,
+                      n_heads=4, n_kv_heads=2, d_ff=64, vocab=64, head_dim=8,
+                      scan_layers=False, remat=False)
+    params = init_model(jax.random.PRNGKey(0), cfg, permissive())
+    eng = Engine(cfg, permissive(), params,
+                 ServeConfig(max_slots=2, max_len=32, prefill_chunk=4))
+    s0 = eng.stats()
+    for k in ("params_bytes", "artifact_bytes", "slot_cache_bytes",
+              "live_bytes", "peak_live_bytes"):
+        assert s0[k] > 0, k
+    assert s0["queue_depth"] == 0 and s0["slots_active"] == 0
+    assert s0["prefill_bytes"] == 0
+    assert s0["peak_live_bytes"] == s0["live_bytes"]
+
+    # 3 requests into 2 slots: all queue until step() admits, then one is
+    # left waiting; peak must include the admitted slots' prefill caches
+    for _ in range(3):
+        eng.submit(Request(prompt=[1, 2, 3], max_new_tokens=4))
+    assert eng.stats()["queue_depth"] == 3
+    eng.step()
+    assert eng.stats()["queue_depth"] == 1
+    s1 = eng.stats()
+    assert s1["peak_live_bytes"] > s0["peak_live_bytes"]
+    while eng.pending():
+        eng.step()
+    s2 = eng.stats()
+    # drained: live falls back to the static floor, peak is sticky
+    assert s2["live_bytes"] == s0["live_bytes"]
+    assert s2["peak_live_bytes"] == s1["peak_live_bytes"]
+    assert s2["queue_depth"] == 0 and s2["slots_active"] == 0
+    # reset() rebases the peak
+    eng.reset()
+    assert eng.stats()["peak_live_bytes"] == s0["peak_live_bytes"]
