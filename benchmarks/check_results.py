@@ -12,8 +12,13 @@ runs even when the bench itself is what broke):
 - ``--history <BENCH_history.jsonl>``: every ladder row is schema-valid,
   and per (rung, trace) the newest sha's throughput has not regressed more
   than ``--tol`` (default 25%) against the previous sha's last row.
+- ``--kernels <BENCH_kernels.json>``: the quant_matmul sweep's roofline
+  schema plus the two fusion bars, gated on deterministic interpret-mode
+  work units (benchmarks/kernel_steps.py), never wall time: group:128 must
+  cost no more steps than channel, and the int8-dot body must beat the
+  f32-dequant baseline.
 
-With no flags, checks whichever of the two default files exist (at least
+With no flags, checks whichever of the default files exist (at least
 one must).  Exit 0 == all checks passed.
 """
 from __future__ import annotations
@@ -26,6 +31,7 @@ import sys
 RESULTS = pathlib.Path(__file__).resolve().parent / "results"
 SERVE_DEFAULT = RESULTS / "BENCH_serve.json"
 HISTORY_DEFAULT = RESULTS / "BENCH_history.jsonl"
+KERNELS_DEFAULT = RESULTS / "BENCH_kernels.json"
 
 # BENCH_serve.json: row names + per-row required keys (the old heredoc)
 SERVE_ROWS = ("serve.static_batch", "serve.continuous",
@@ -154,6 +160,54 @@ def check_serve(path: pathlib.Path) -> list[str]:
     return errs
 
 
+# BENCH_kernels.json: the Pallas sweep rows the kernel gate reasons about
+# (xla_ref / headline-ratio rows are informational)
+KERNEL_ROWS = ("kernel.quant_matmul.pallas_interpret.int8dot.channel",
+               "kernel.quant_matmul.pallas_interpret.int8dot.group128",
+               "kernel.quant_matmul.pallas_interpret.dequant.channel")
+KERNEL_KEYS = ("interp_steps", "flops", "bytes")
+
+
+def check_kernels(path: pathlib.Path) -> list[str]:
+    """Schema + the two decode-path fusion bars.
+
+    Gated on ``interp_steps`` — trace-time work-unit counts, deterministic
+    across machines — never on interpret-mode wall time:
+
+    - group:128 steps <= channel steps (was a 1.26x wall overhead before the
+      per-group partial-accumulator restructure; at bk == g the bodies are
+      identical, so equality is the expected result);
+    - int8dot steps < dequant steps (the integer-operand dot must strictly
+      beat the materialize-f32-weights baseline it replaced).
+    """
+    try:
+        rows = {r["name"]: r for r in json.loads(path.read_text())}
+    except (json.JSONDecodeError, TypeError, KeyError) as e:
+        return [f"{path.name}: unparseable: {e}"]
+    errs = [f"{path.name}: missing row {name!r}"
+            for name in KERNEL_ROWS if name not in rows]
+    if errs:
+        return errs
+    for name in KERNEL_ROWS:
+        for k in KERNEL_KEYS:
+            v = rows[name].get(k)
+            if not isinstance(v, int) or isinstance(v, bool) or v <= 0:
+                errs.append(f"{path.name}: row {name!r} key {k!r} must be a "
+                            f"positive int, got {v!r}")
+    if errs:
+        return errs
+    ch, grp, deq = (rows[n]["interp_steps"] for n in KERNEL_ROWS)
+    if grp > ch:
+        errs.append(f"{path.name}: group:128 interp_steps {grp} > channel "
+                    f"{ch} — the group layout must not cost more than "
+                    f"channel")
+    if ch >= deq:
+        errs.append(f"{path.name}: int8dot interp_steps {ch} >= dequant "
+                    f"baseline {deq} — the fused kernel must beat the f32 "
+                    f"dequant body")
+    return errs
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
     ap.add_argument("--serve", type=pathlib.Path, nargs="?",
@@ -163,6 +217,10 @@ def main(argv: list[str] | None = None) -> int:
                     const=HISTORY_DEFAULT, default=None,
                     help="BENCH_history.jsonl to check "
                          f"(default {HISTORY_DEFAULT})")
+    ap.add_argument("--kernels", type=pathlib.Path, nargs="?",
+                    const=KERNELS_DEFAULT, default=None,
+                    help="BENCH_kernels.json to check "
+                         f"(default {KERNELS_DEFAULT})")
     ap.add_argument("--tol", type=float, default=0.25,
                     help="allowed sha-over-sha tok_per_step drop (0.25=25%%)")
     args = ap.parse_args(argv)
@@ -172,26 +230,31 @@ def main(argv: list[str] | None = None) -> int:
         targets.append(("serve", args.serve))
     if args.history is not None:
         targets.append(("history", args.history))
+    if args.kernels is not None:
+        targets.append(("kernels", args.kernels))
     if not targets:                                  # default: whatever exists
         targets = [(kind, p) for kind, p in
-                   (("serve", SERVE_DEFAULT), ("history", HISTORY_DEFAULT))
+                   (("serve", SERVE_DEFAULT), ("history", HISTORY_DEFAULT),
+                    ("kernels", KERNELS_DEFAULT))
                    if p.exists()]
         if not targets:
-            print(f"check_results: neither {SERVE_DEFAULT} nor "
-                  f"{HISTORY_DEFAULT} exists", file=sys.stderr)
+            print(f"check_results: none of {SERVE_DEFAULT}, "
+                  f"{HISTORY_DEFAULT}, {KERNELS_DEFAULT} exist",
+                  file=sys.stderr)
             return 1
 
+    checkers = {"serve": check_serve, "kernels": check_kernels,
+                "history": lambda p: check_history(p, tol=args.tol)}
     errs = []
     for kind, path in targets:
         if not path.exists():
             errs.append(f"{path}: does not exist")
             continue
-        found = (check_serve(path) if kind == "serve"
-                 else check_history(path, tol=args.tol))
+        found = checkers[kind](path)
         errs.extend(found)
         if not found:
             n = (len(load_history(path)[0]) if kind == "history" else
-                 len(SERVE_ROWS))
+                 len(SERVE_ROWS if kind == "serve" else KERNEL_ROWS))
             print(f"check_results: {path} OK ({kind}, {n} rows)")
     for e in errs:
         print(f"check_results: FAIL: {e}", file=sys.stderr)

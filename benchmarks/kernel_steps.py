@@ -1,0 +1,91 @@
+"""Deterministic interpret-mode work units for Pallas kernels.
+
+Wall-clock micro-benchmarks of interpret-mode kernels measure the Python
+interpreter, not the kernel — noisy and machine-dependent, useless as a CI
+gate.  Instead we *count* the work a kernel body performs, straight from its
+jaxpr:
+
+- ``dot_general``: 2 · prod(out_shape) · contraction_size — MAC-counted
+  flops, the term that dominates on the MXU;
+- every other equation: the number of output elements it produces — a proxy
+  for VPU/element-wise traffic (this is what the int8-dot restructure
+  shrinks: the f32-dequant baseline materializes and multiplies whole
+  [bk, bn] weight tiles per K-step, int8dot touches [bm, bk] + [bm, bn]);
+- sub-jaxprs (pjit, custom_vjp, scan, ...) recurse; ``cond`` (``pl.when``)
+  takes the max over branches — a data-independent upper bound, so counts
+  stay deterministic.
+
+``pallas_work_units(fn, *args)`` traces ``fn``, finds every ``pallas_call``,
+and returns Σ body_units × grid_size.  Pure trace-time arithmetic: no
+execution, no timing, identical on every machine — which is what lets
+benchmarks/check_results.py gate on the numbers.
+"""
+from __future__ import annotations
+
+import math
+
+
+def _shape(var) -> tuple:
+    return tuple(getattr(var.aval, "shape", ()) or ())
+
+
+def _dot_units(eqn) -> int:
+    """2 · prod(out) · contraction_size for one dot_general equation."""
+    (lhs_c, _rhs_c), _batch = eqn.params["dimension_numbers"]
+    lhs_shape = _shape(eqn.invars[0])
+    contract = math.prod(lhs_shape[d] for d in lhs_c) or 1
+    out = math.prod(_shape(eqn.outvars[0])) or 1
+    return 2 * out * contract
+
+
+def _unwrap(j):
+    return getattr(j, "jaxpr", j)
+
+
+def count_jaxpr_units(jaxpr) -> int:
+    """Work units of one (possibly closed) jaxpr, recursing into sub-jaxprs."""
+    jaxpr = _unwrap(jaxpr)
+    units = 0
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "dot_general":
+            units += _dot_units(eqn)
+        elif "branches" in eqn.params:           # cond / pl.when: upper bound
+            units += max((count_jaxpr_units(b)
+                          for b in eqn.params["branches"]), default=0)
+        elif any(k in eqn.params for k in ("jaxpr", "call_jaxpr")):
+            inner = eqn.params.get("jaxpr", eqn.params.get("call_jaxpr"))
+            mult = eqn.params.get("length", 1) if name == "scan" else 1
+            units += mult * count_jaxpr_units(inner)
+        else:
+            units += sum(math.prod(_shape(v)) or 1 for v in eqn.outvars)
+    return units
+
+
+def _walk_pallas(jaxpr, acc: list) -> None:
+    jaxpr = _unwrap(jaxpr)
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            body = eqn.params["jaxpr"]
+            grid = eqn.params["grid_mapping"].grid
+            acc.append(count_jaxpr_units(body) * (math.prod(grid) or 1))
+            continue
+        for key in ("jaxpr", "call_jaxpr"):
+            if key in eqn.params:
+                _walk_pallas(eqn.params[key], acc)
+        if "branches" in eqn.params:
+            for b in eqn.params["branches"]:
+                _walk_pallas(b, acc)
+
+
+def pallas_work_units(fn, *args, **kwargs) -> int:
+    """Σ (kernel-body work units × grid size) over every pallas_call reached
+    when tracing ``fn(*args, **kwargs)``.  Raises if the trace contains no
+    pallas_call — a zero would silently pass any ratio gate."""
+    import jax
+    jaxpr = jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args)
+    acc: list = []
+    _walk_pallas(jaxpr, acc)
+    if not acc:
+        raise ValueError(f"no pallas_call found tracing {fn!r}")
+    return sum(acc)

@@ -6,6 +6,7 @@ metric). Full rows land in benchmarks/results/bench_rows.json.
 """
 from __future__ import annotations
 
+import functools
 import json
 import pathlib
 import time
@@ -16,45 +17,98 @@ import jax.numpy as jnp
 
 
 def _quant_matmul_layout_bench() -> list[dict]:
-    """quant_matmul micro-bench: channel vs group:128 right-scale layouts.
+    """quant_matmul micro-bench: roofline columns + the layout × variant sweep.
 
-    Times the Pallas kernel (interpret on CPU — body-correctness cost, not TPU
-    perf) and the XLA reference under both layouts at a serving-ish tile
-    (M=128, K=512, N=128), plus the ratio row that starts the layout-overhead
-    perf trajectory.  Rows land in benchmarks/results/BENCH_kernels.json.
+    Every row carries analytic roofline columns (``flops`` = 2MKN MACs,
+    ``bytes`` = x + packed weights + scales + out, ``ai`` = flops/bytes) and
+    Pallas rows add ``interp_steps`` — the deterministic trace-time work-unit
+    count from benchmarks/kernel_steps.py, identical on every machine, which
+    is what ``check_results.py --kernels`` gates on (wall µs in interpret
+    mode measures the Python interpreter, not the kernel).
+
+    The sweep runs both kernel bodies (``int8dot`` — integer weight operand,
+    hoisted scales — and the pre-fusion ``dequant`` baseline) under channel
+    and group:128 right-scale layouts at bk=128 == g, where the int8dot
+    group body is *identical* to its channel body (DESIGN.md "Decode-path
+    kernel fusion").  Headline ratio rows:
+
+    - ``kernel.quant_matmul.group_overhead``: group:128 / channel step ratio
+      (was 1.26x wall pre-restructure; the gate demands <= 1.0 now);
+    - ``kernel.quant_matmul.int8dot_vs_dequant``: int8dot / dequant step
+      ratio (the gate demands < 1.0 — the fusion must pay for itself).
+
+    Rows land in benchmarks/results/BENCH_kernels.json.
     """
     from repro.core.fakequant import pack_int4
     from repro.kernels import quant_matmul
     from repro.kernels import ref
     from .common import RESULTS, timed
+    from .kernel_steps import pallas_work_units
     key = jax.random.PRNGKey(0)
-    M, K, N, g = 128, 512, 128, 128
+    M, K, N, g, bk = 128, 512, 128, 128, 128
     x = jax.random.normal(key, (M, K), jnp.float32)
     qw = pack_int4(jax.random.randint(key, (K, N), -7, 8).astype(jnp.int8), 0)
     swl = jnp.full((K,), 0.02)
-    swr_ch = jnp.exp(jax.random.normal(key, (N,)) * 0.1)
-    swr_grp = jnp.exp(jax.random.normal(key, (K // g, N)) * 0.1)
-    flops = 2 * M * K * N
+    layouts = {"channel": jnp.exp(jax.random.normal(key, (N,)) * 0.1),
+               "group128": jnp.exp(jax.random.normal(key, (K // g, N)) * 0.1)}
+
+    def roofline(swr) -> dict:
+        flops = 2 * M * K * N
+        nbytes = (x.size * x.dtype.itemsize + qw.size + swl.size * 4
+                  + swr.size * 4 + M * N * 4)
+        return {"M": M, "K": K, "N": N, "group": g, "bk": bk,
+                "flops": flops, "bytes": nbytes,
+                "ai": round(flops / nbytes, 2)}
+
     rows = []
-    for tag, fn, args in [
-        ("xla_ref.channel", jax.jit(ref.quant_matmul_ref),
-         (x, qw, swl, swr_ch)),
-        ("xla_ref.group128", jax.jit(ref.quant_matmul_ref),
-         (x, qw, swl, swr_grp)),
-        ("pallas_interpret.channel",
-         lambda *a: quant_matmul(*a, interpret=True), (x, qw, swl, swr_ch)),
-        ("pallas_interpret.group128",
-         lambda *a: quant_matmul(*a, interpret=True), (x, qw, swl, swr_grp)),
-    ]:
-        us = timed(fn, *args)
-        rows.append({"name": f"kernel.quant_matmul.{tag}", "us_per_call": us,
-                     "derived": f"{flops / us / 1e3:.1f}MFLOP/s",
-                     "M": M, "K": K, "N": N, "group": g})
-    us = {r["name"].split(".", 2)[-1]: r["us_per_call"] for r in rows}
+    for tag, swr in layouts.items():
+        us = timed(jax.jit(ref.quant_matmul_ref), x, qw, swl, swr)
+        rows.append({"name": f"kernel.quant_matmul.xla_ref.{tag}",
+                     "us_per_call": us, "derived": f"{2*M*K*N/us/1e3:.1f}MFLOP/s",
+                     **roofline(swr)})
+    steps: dict[str, int] = {}
+    for variant in ("int8dot", "dequant"):
+        for tag, swr in layouts.items():
+            us = timed(functools.partial(quant_matmul, bk=bk, interpret=True,
+                                         variant=variant), x, qw, swl, swr)
+            n = pallas_work_units(quant_matmul, x, qw, swl, swr, bk=bk,
+                                  interpret=True, variant=variant)
+            steps[f"{variant}.{tag}"] = n
+            rows.append({"name": ("kernel.quant_matmul.pallas_interpret."
+                                  f"{variant}.{tag}"),
+                         "us_per_call": us, "interp_steps": n,
+                         "derived": f"{n/1e6:.2f}Munits", **roofline(swr)})
+    grp = steps["int8dot.group128"] / steps["int8dot.channel"]
+    fus = steps["int8dot.channel"] / steps["dequant.channel"]
     rows.append({"name": "kernel.quant_matmul.group_overhead",
-                 "us_per_call": 0.0,
-                 "derived": (f"xla={us['xla_ref.group128'] / us['xla_ref.channel']:.3f}x;"
-                             f"interp={us['pallas_interpret.group128'] / us['pallas_interpret.channel']:.3f}x")})
+                 "us_per_call": 0.0, "steps_ratio": round(grp, 4),
+                 "derived": f"group128/channel steps={grp:.3f}x"})
+    rows.append({"name": "kernel.quant_matmul.int8dot_vs_dequant",
+                 "us_per_call": 0.0, "steps_ratio": round(fus, 4),
+                 "derived": f"int8dot/dequant steps={fus:.3f}x"})
+
+    # flash-decode kernel: informational roofline row (serving shape).  The
+    # kernel is memory-bound; ``bytes`` is the full-cache traffic the grid
+    # *touches*, ``bytes_live`` what the pl.when dead-block skip actually
+    # reads for these slot lengths — the gap is the decode-latency win.
+    from repro.kernels.decode_attention import decode_attention
+    S, T, Hkv, G, hd, dbk = 4, 512, 2, 2, 32, 128
+    q = jax.random.normal(key, (S, Hkv, G, hd), jnp.float32)
+    kc = jax.random.normal(jax.random.fold_in(key, 1), (S, T, Hkv, hd))
+    vc = jax.random.normal(jax.random.fold_in(key, 2), (S, T, Hkv, hd))
+    lengths = jnp.asarray([17, 128, 300, 512], jnp.int32)
+    us = timed(functools.partial(decode_attention, bk=dbk, interpret=True),
+               q, kc, vc, lengths)
+    n = pallas_work_units(decode_attention, q, kc, vc, lengths, bk=dbk,
+                          interpret=True)
+    live = sum(-(-int(L) // dbk) * dbk for L in lengths)
+    rows.append({"name": "kernel.decode_attention.pallas_interpret",
+                 "us_per_call": us, "interp_steps": n,
+                 "S": S, "T": T, "Hkv": Hkv, "G": G, "hd": hd, "bk": dbk,
+                 "flops": 4 * S * Hkv * G * T * hd,
+                 "bytes": 2 * S * T * Hkv * hd * 4,
+                 "bytes_live": 2 * live * Hkv * hd * 4,
+                 "derived": f"live/full KV traffic={live/(S*T):.2f}x"})
     out = RESULTS / "BENCH_kernels.json"
     out.write_text(json.dumps(rows, indent=1, default=str))
     return rows
@@ -241,13 +295,21 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--serve-smoke", action="store_true",
                     help="CI entry: just the serving bench -> "
                          "BENCH_serve.json (fast)")
+    ap.add_argument("--kernels-smoke", action="store_true",
+                    help="CI entry: just the kernel micro-bench -> "
+                         "BENCH_kernels.json (fast; gate with "
+                         "check_results.py --kernels)")
     ap.add_argument("--allow-errors", action="store_true",
                     help="print ERROR rows but still exit 0 (the pre-gate "
                          "behavior; CI runs without it so errors are red)")
     args = ap.parse_args(argv)
-    if args.serve_smoke:
+    if args.serve_smoke or args.kernels_smoke:
+        # smoke paths write only their own BENCH_*.json — bench_rows.json is
+        # the full run's aggregate and must not be clobbered with a subset
         print("name,us_per_call,derived")
-        for r in _serve_bench(smoke=True):
+        rows = (_serve_bench(smoke=True) if args.serve_smoke
+                else _quant_matmul_layout_bench())
+        for r in rows:
             print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
         return 0
     from . import roofline
@@ -284,10 +346,17 @@ def main(argv: list[str] | None = None) -> int:
     except Exception as e:  # noqa: BLE001
         print(f"roofline,0,ERROR:{e}")
         errors.append("roofline")
-    out = pathlib.Path(__file__).resolve().parent / "results" / "bench_rows.json"
-    out.parent.mkdir(parents=True, exist_ok=True)
-    out.write_text(json.dumps(all_rows, indent=1, default=str))
-    print(f"# total {time.time()-t_all:.1f}s; rows -> {out}")
+    if all_rows:
+        out = (pathlib.Path(__file__).resolve().parent / "results"
+               / "bench_rows.json")
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(all_rows, indent=1, default=str))
+        print(f"# total {time.time()-t_all:.1f}s; rows -> {out}")
+    else:
+        # every bench errored (or none ran): a dead [] would shadow the last
+        # real run's rows — leave the file alone
+        print(f"# total {time.time()-t_all:.1f}s; no rows, "
+              f"bench_rows.json not written")
     if errors:
         print(f"# {len(errors)} bench(es) errored: {', '.join(errors)}")
         if not args.allow_errors:

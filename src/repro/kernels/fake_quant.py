@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .quant_matmul import default_interpret
+
 
 def _fq_kernel(x_ref, s_ref, o_ref, *, qmax: float):
     x = x_ref[...].astype(jnp.float32)
@@ -27,6 +29,8 @@ def _fq_kernel(x_ref, s_ref, o_ref, *, qmax: float):
 
 
 def _fq_fwd_impl(x, scale, bits, br, bc, interpret):
+    if interpret is None:               # auto-select by backend
+        interpret = default_interpret()
     qmax = float(2 ** (bits - 1) - 1)
     R, C = x.shape
     br, bc = min(br, R), min(bc, C)
@@ -44,9 +48,11 @@ def _fq_fwd_impl(x, scale, bits, br, bc, interpret):
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
 def fake_quant_kernel(x: jax.Array, scale: jax.Array, bits: int = 4,
-                      br: int = 256, bc: int = 256, interpret: bool = True
-                      ) -> jax.Array:
-    """STE fake-quant of x (2-D) with broadcastable scale."""
+                      br: int = 256, bc: int = 256,
+                      interpret: bool | None = None) -> jax.Array:
+    """STE fake-quant of x (2-D) with broadcastable scale.
+
+    interpret=None auto-selects by backend (quant_matmul.default_interpret)."""
     return _fq_fwd_impl(x, scale, bits, br, bc, interpret)
 
 

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .quant_matmul import default_interpret
+
 _NEG = -1e30
 
 
@@ -66,8 +68,13 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                    static_argnames=("causal", "bq", "bk", "interpret"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                     causal: bool = True, bq: int = 256, bk: int = 256,
-                    interpret: bool = True) -> jax.Array:
-    """q,k,v: [BH, S, hd] (batch×heads flattened) → [BH, S, hd]."""
+                    interpret: bool | None = None) -> jax.Array:
+    """q,k,v: [BH, S, hd] (batch×heads flattened) → [BH, S, hd].
+
+    interpret=None auto-selects by backend (quant_matmul.default_interpret).
+    """
+    if interpret is None:
+        interpret = default_interpret()
     BH, S, hd = q.shape
     Sk = k.shape[1]
     bq, bk = min(bq, S), min(bk, Sk)

@@ -9,7 +9,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from ..core.fakequant import expand_group_scale
 from . import ref
 from .fake_quant import fake_quant_kernel
 from .flash_attention import flash_attention
@@ -57,18 +56,33 @@ def qlinear_deployed(x: jax.Array, export: dict, use_pallas: bool = False,
         else:                                 # odd shapes: XLA reference path
             y = ref.quant_matmul_ref(x2, q, s_wl, s_wr)
     else:                                     # int8 / unpacked (exempt layers)
-        s_wr_full = (expand_group_scale(s_wr, q.shape[-2], axis=0)
-                     if n_groups is not None else s_wr[None, :])
-        w = q.astype(jnp.float32) * s_wl[:, None] * s_wr_full
-        y = (x2.astype(jnp.float32) @ w).astype(x.dtype)
+        # same restructure as the int8dot kernel, in XLA: the integer weights
+        # stay the dot operand (never a dequantized f32 [K, N]); s_wl rides on
+        # x, s_wr scales the per-group partial sums
+        xs = x2.astype(jnp.float32) * s_wl[None, :]
+        K, N = q.shape
+        if n_groups is not None:
+            assert K % n_groups == 0, (K, n_groups)
+            g = K // n_groups
+            p = jax.lax.dot_general(
+                xs.reshape(-1, n_groups, g), q.reshape(n_groups, g, N),
+                (((2,), (1,)), ((1,), (0,))),
+                preferred_element_type=jnp.float32)     # [n_groups, B, N]
+            y = jnp.sum(p * s_wr[:, None, :], axis=0).astype(x.dtype)
+        else:
+            p = jax.lax.dot_general(xs, q, (((1,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+            y = (p * s_wr[None, :]).astype(x.dtype)
     if "b" in export:
         y = y + export["b"].astype(y.dtype)
     return y.reshape(*lead, -1)
 
 
 def fused_fake_quant(x: jax.Array, scale: jax.Array, bits: int = 4,
-                     use_pallas: bool = False, interpret: bool = True
+                     use_pallas: bool = False, interpret: bool | None = None
                      ) -> jax.Array:
+    """interpret=None auto-selects by backend (compiled on TPU, interpreter
+    elsewhere) — same policy as quant_matmul.default_interpret."""
     if use_pallas and x.ndim == 2:
         return fake_quant_kernel(x, jnp.broadcast_to(scale, x.shape),
                                  bits, 256, 256, interpret)
@@ -77,7 +91,7 @@ def fused_fake_quant(x: jax.Array, scale: jax.Array, bits: int = 4,
 
 def attention_prefill(q: jax.Array, k: jax.Array, v: jax.Array,
                       causal: bool = True, use_pallas: bool = False,
-                      interpret: bool = True) -> jax.Array:
+                      interpret: bool | None = None) -> jax.Array:
     """q,k,v: [B, S, H, hd] → flash attention over flattened (B·H)."""
     B, S, H, hd = q.shape
     qt = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)

@@ -1,19 +1,34 @@
-"""Pallas TPU kernel: W4 (int4-nibble-packed) dequantize-matmul.
+"""Pallas TPU kernel: W4 (int4-nibble-packed) integer-operand matmul.
 
 The deployment hot-spot of a QFT-quantized model:  y = x @ (S_wL ⊙ Ŵ ⊙ S_wR)
 with Ŵ stored packed (two int4 per byte) in HBM.  TPU adaptation of the
-paper's recode stage (DESIGN.md §2): unpack + dequantize happen in VMEM on
-MXU-aligned tiles, fused into the matmul's producer — weights never
-materialize in bf16 in HBM, cutting weight-memory traffic ~4× vs bf16.
+paper's recode stage (DESIGN.md §2): unpack happens in VMEM on MXU-aligned
+tiles and the weight operand enters the dot *as int8* — it never materializes
+as an f32 [bk, bn] tile, so the int4 memory win becomes a compute win too.
 
-Two right-scale layouts (core.qconfig.QLayout), selected by s_wr's rank:
+Scale hoisting (DESIGN.md "Decode-path kernel fusion"):
 
-- rank-1 (layerwise / channel): s_wr[N]; the scale matrix is the outer
-  product s_wl ⊗ s_wr and each K-step stages only a [1, bn] slice.
-- group:  s_wr[K/g, N]; the producer stages a [bk/g, bn] scale tile per
-  K-step and block-broadcasts it over each g-row band before the MXU dot.
-  Tiling constraint: ``bk % g == 0`` (a K-tile holds whole groups) — callers
-  (kernels.ops.pallas_tiles_ok) fall back to the XLA reference otherwise.
+- ``s_wl`` (1/S_a of the input stream) is a row scale over K — it commutes
+  with the contraction, so it is applied to the [bm, bk] **x-tile** (bm·bk
+  multiplies) instead of the [bk, bn] weight tile (bk·bn multiplies, plus an
+  f32 weight materialization).
+- ``s_wr`` is constant within a K-group, so it hoists *out* of the dot
+  entirely: the kernel keeps one int8-operand partial sum per group and
+  applies the [n_groups, bn] scale to the [.., bm, bn] partials — the
+  broadcast-to-[bk, bn] f32 dequant disappears.
+
+One kernel body covers every layout (core.qconfig.QLayout): rank-1
+(layerwise / channel) s_wr[N] is staged as a single "group" [1, N] (the
+whole K axis is one group), group:g uses s_wr[K/g, N] with a [bk/g, bn]
+scale tile per K-step.  With ``bk == g`` the group body is *identical* to
+the channel body — group:128 runs at exact parity with channel.
+Tiling constraint: ``bk % g == 0`` (a K-tile holds whole groups) — callers
+(kernels.ops.pallas_tiles_ok) fall back to the XLA reference otherwise.
+
+``variant="dequant"`` keeps the original dequantize-then-f32-dot body as a
+benchmark baseline (benchmarks/run.py measures int8dot vs dequant in
+deterministic interpret-mode work units); production always wants the
+default ``"int8dot"``.
 
 Tiling: grid (M/bm, N/bn, K/bk); x tile [bm, bk] and packed-weight tile
 [bk/2, bn] are staged into VMEM per step; f32 accumulation in a VMEM scratch
@@ -49,17 +64,60 @@ def _unpack_tile(packed: jax.Array) -> jax.Array:
     return jnp.stack([lo, hi], axis=1).reshape(bk2 * 2, bn)
 
 
-def _qmm_kernel(x_ref, qw_ref, swl_ref, swr_ref, o_ref, acc_ref, *,
-                n_k: int):
-    """One (m, n, k) grid step — rank-1 (layerwise/channel) scales.
+def _qmm_int8_kernel(x_ref, qw_ref, swl_ref, swg_ref, o_ref, acc_ref, *,
+                     n_k: int, n_bg: int):
+    """One (m, n, k) grid step — integer weight operand, any layout.
 
-    x_ref:   [bm, bk]    bf16/f32 activations tile
-    qw_ref:  [bk//2, bn] uint8 packed int4 weights tile
-    swl_ref: [bk, 1]     f32 left scale slice (1/S_a of the input stream)
-    swr_ref: [1, bn]     f32 right scale slice (S_a_out · F̂)
-    o_ref:   [bm, bn]    output tile
-    acc_ref: [bm, bn]    f32 VMEM accumulator scratch
+    x_ref:   [bm, bk]      bf16/f32 activations tile
+    qw_ref:  [bk//2, bn]   uint8 packed int4 weights tile
+    swl_ref: [1, bk]       f32 left scale slice (1/S_a of the input stream)
+    swg_ref: [n_bg, bn]    f32 right-scale tile, one row per K-group in the
+                           tile (n_bg == 1 for layerwise/channel)
+    o_ref:   [bm, bn]      output tile
+    acc_ref: [bm, bn]      f32 VMEM accumulator scratch
+
+    The weight tile stays int8 into the dot (mixed-precision dot_general with
+    f32 accumulation — on MXU hardware the integer operand feeds the
+    systolic array directly); s_wl rides on the x-tile; s_wr multiplies the
+    per-group partial sums, never a [bk, bn] broadcast.
     """
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w8 = _unpack_tile(qw_ref[...])                        # int8 [bk, bn]
+    xs = x_ref[...].astype(jnp.float32) * swl_ref[...]    # [bm, bk]
+    sg = swg_ref[...]                                     # [n_bg, bn]
+    bm, bk = xs.shape
+    bn = w8.shape[1]
+    if n_bg == 1:
+        # whole tile is one group: single int8-operand dot, scale the partial
+        p = jax.lax.dot_general(xs, w8, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        acc_ref[...] += p * sg
+    else:
+        # per-group partial accumulators: batched dot over the n_bg groups in
+        # this K-tile ([bm, g] × [g, bn] each), then scale+reduce the partials
+        g = bk // n_bg
+        p = jax.lax.dot_general(
+            xs.reshape(bm, n_bg, g), w8.reshape(n_bg, g, bn),
+            (((2,), (1,)), ((1,), (0,))),
+            preferred_element_type=jnp.float32)           # [n_bg, bm, bn]
+        acc_ref[...] += jnp.sum(p * sg[:, None, :], axis=0)
+
+    @pl.when(k_step == n_k - 1)
+    def _out():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _qmm_dequant_kernel(x_ref, qw_ref, swl_ref, swr_ref, o_ref, acc_ref, *,
+                        n_k: int):
+    """Baseline body (variant="dequant"), rank-1 scales: dequantize the
+    weight tile to f32 *before* the dot.  Kept only so the micro-bench can
+    quantify what the int8-operand restructure buys; swl_ref here is the
+    [bk, 1] column layout the f32 dequant wants."""
     k_step = pl.program_id(2)
 
     @pl.when(k_step == 0)
@@ -79,14 +137,11 @@ def _qmm_kernel(x_ref, qw_ref, swl_ref, swr_ref, o_ref, acc_ref, *,
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
-def _qmm_group_kernel(x_ref, qw_ref, swl_ref, swg_ref, o_ref, acc_ref, *,
-                      n_k: int, g: int):
-    """One (m, n, k) grid step — group scales.
-
-    swg_ref: [bk//g, bn] f32 right-scale tile, one row per in-group; block-
-    broadcast over each band of g unpacked weight rows before the dot (the
-    group analogue of the rank-1 producer above).
-    """
+def _qmm_dequant_group_kernel(x_ref, qw_ref, swl_ref, swg_ref, o_ref,
+                              acc_ref, *, n_k: int, g: int):
+    """Baseline body (variant="dequant"), group scales: block-broadcasts the
+    [bk//g, bn] scale tile over each g-row band — the f32 materialization the
+    int8dot kernel exists to remove."""
     k_step = pl.program_id(2)
 
     @pl.when(k_step == 0)
@@ -109,10 +164,12 @@ def _qmm_group_kernel(x_ref, qw_ref, swl_ref, swg_ref, o_ref, acc_ref, *,
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "bk", "interpret", "variant"))
 def quant_matmul(x: jax.Array, qw: jax.Array, s_wl: jax.Array,
                  s_wr: jax.Array, bm: int = 128, bn: int = 128, bk: int = 256,
-                 interpret: bool | None = None) -> jax.Array:
+                 interpret: bool | None = None,
+                 variant: str = "int8dot") -> jax.Array:
     """y = x @ dequant(qw) for int4-packed qw.
 
     x: [M, K]; qw: [K//2, N] uint8; s_wl: [K] f32;
@@ -123,9 +180,13 @@ def quant_matmul(x: jax.Array, qw: jax.Array, s_wl: jax.Array,
     groups (``bk % g == 0``) — callers gate via kernels.ops.pallas_tiles_ok
     (production shapes are MXU-aligned by construction).
     interpret=None auto-selects by backend; True forces the CPU interpreter.
+    ``variant``: "int8dot" (default — integer weight operand, hoisted scales)
+    or "dequant" (the pre-fusion f32-dequant baseline, benchmarks only).
     """
     if interpret is None:
         interpret = default_interpret()
+    if variant not in ("int8dot", "dequant"):
+        raise ValueError(f"unknown quant_matmul variant {variant!r}")
     M, K = x.shape
     Kh, N = qw.shape
     assert Kh * 2 == K, (K, Kh)
@@ -137,20 +198,45 @@ def quant_matmul(x: jax.Array, qw: jax.Array, s_wl: jax.Array,
     in_specs = [
         pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),
         pl.BlockSpec((bk // 2, bn), lambda m, n, k: (k, n)),
-        pl.BlockSpec((bk, 1), lambda m, n, k: (k, 0)),
     ]
     if s_wr.ndim == 2:                        # group layout: [K//g, N]
         n_groups = s_wr.shape[0]
         assert K % n_groups == 0, (K, n_groups)
         g = K // n_groups
         assert bk % g == 0, (bk, g)
-        kernel = functools.partial(_qmm_group_kernel, n_k=n_k, g=g)
-        in_specs.append(pl.BlockSpec((bk // g, bn), lambda m, n, k: (k, n)))
-        swr_arg = s_wr
     else:
-        kernel = functools.partial(_qmm_kernel, n_k=n_k)
-        in_specs.append(pl.BlockSpec((1, bn), lambda m, n, k: (0, n)))
-        swr_arg = s_wr[None, :]
+        g = None
+
+    if variant == "int8dot":
+        # s_wl staged as a [1, K] row → multiplies the x-tile in-kernel;
+        # rank-1 s_wr is normalized to one group spanning the whole K axis,
+        # so a single kernel body serves every layout
+        in_specs.append(pl.BlockSpec((1, bk), lambda m, n, k: (0, k)))
+        swl_arg = s_wl[None, :]
+        if g is not None:
+            n_bg = bk // g
+            in_specs.append(pl.BlockSpec((bk // g, bn),
+                                         lambda m, n, k: (k, n)))
+            swr_arg = s_wr
+        else:
+            n_bg = 1
+            in_specs.append(pl.BlockSpec((1, bn), lambda m, n, k: (0, n)))
+            swr_arg = s_wr[None, :]
+        kernel = functools.partial(_qmm_int8_kernel, n_k=n_k, n_bg=n_bg)
+    else:                                     # "dequant" baseline
+        # s_wl staged as a [K, 1] column → multiplies the f32 weight tile
+        in_specs.append(pl.BlockSpec((bk, 1), lambda m, n, k: (k, 0)))
+        swl_arg = s_wl[:, None]
+        if g is not None:
+            kernel = functools.partial(_qmm_dequant_group_kernel, n_k=n_k,
+                                       g=g)
+            in_specs.append(pl.BlockSpec((bk // g, bn),
+                                         lambda m, n, k: (k, n)))
+            swr_arg = s_wr
+        else:
+            kernel = functools.partial(_qmm_dequant_kernel, n_k=n_k)
+            in_specs.append(pl.BlockSpec((1, bn), lambda m, n, k: (0, n)))
+            swr_arg = s_wr[None, :]
 
     return pl.pallas_call(
         kernel,
@@ -160,4 +246,4 @@ def quant_matmul(x: jax.Array, qw: jax.Array, s_wl: jax.Array,
         out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
-    )(x, qw, s_wl[:, None], swr_arg)
+    )(x, qw, swl_arg, swr_arg)

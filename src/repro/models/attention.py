@@ -14,10 +14,23 @@ import jax.numpy as jnp
 from ..core import dof
 from ..core.plan import plan_view
 from ..core.qconfig import QuantConfig
+from ..kernels.decode_attention import decode_attention, decode_tiles_ok
 from .config import ModelConfig
 from .layers import apply_mrope, apply_rope, rmsnorm, init_rmsnorm
 
 Params = dict[str, Any]
+
+
+def decode_route(cfg: ModelConfig, max_len: int, use_pallas: bool,
+                 bk: int = 128) -> bool:
+    """Whether the vector-pos decode path routes through the Pallas
+    flash-decode kernel for a serving cache of depth ``max_len``.
+
+    The single source of truth for kernel routing: :func:`attention` applies
+    it at trace time and ``serve.engine.Engine.stats()`` reports it as
+    per-layer route counters — they cannot disagree.  MLA layers never route
+    (the latent-space decode is a different kernel, future work)."""
+    return bool(use_pallas) and cfg.mla is None and decode_tiles_ok(max_len, bk)
 
 
 # --------------------------------------------------------------------------
@@ -96,12 +109,19 @@ def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool,
 def attention(x: jax.Array, p: Params, cfg: ModelConfig,
               qcfg: QuantConfig | None, positions: jax.Array,
               cache: Params | None = None, taps: dict | None = None,
-              prefix: str = "", plan=None) -> tuple[jax.Array, Params | None]:
+              prefix: str = "", plan=None, use_pallas: bool = False,
+              interpret: bool | None = None) -> tuple[jax.Array, Params | None]:
     """Returns (out, updated layer cache).  cache leaves: k/v [B, Smax, Hkv, hd].
 
     ``plan``: QuantPlan/PlanView scoped to this module's path
     (``layers.attn``, ``dec_layers.attn``, …) — per-projection fake-quant
     bits come from the resolved plan so training and export share one grid.
+
+    ``use_pallas``: route the vector-pos decode step (continuous-batching
+    serving: per-slot offsets, Sq == 1) through the slot-masked flash-decode
+    kernel (kernels/decode_attention.py), gated by :func:`decode_route`; the
+    masked-XLA `_sdpa` below stays the oracle and the fallback.  All other
+    modes (train, prefill, scalar-pos decode) are unaffected.
     """
     B, Sq, _ = x.shape
     hd = cfg.head_dim
@@ -141,7 +161,16 @@ def attention(x: jax.Array, p: Params, cfg: ModelConfig,
                 cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
             cv = jax.lax.dynamic_update_slice(
                 cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
-        out = _sdpa(q, ck, cv, causal=Sq > 1, q_offset=pos, kv_len=pos + Sq)
+        if (Sq == 1 and getattr(pos, "ndim", 0) == 1
+                and decode_route(cfg, ck.shape[1], use_pallas)):
+            # slot-masked flash-decode: per-slot valid prefix is pos + 1
+            # (the token just written above), dead KV blocks skipped
+            qd = q[:, 0].reshape(B, Hkv, H // Hkv, hd)
+            od = decode_attention(qd, ck, cv, pos + 1, interpret=interpret)
+            out = od.reshape(B, 1, H, hd).astype(x.dtype)
+        else:
+            out = _sdpa(q, ck, cv, causal=Sq > 1, q_offset=pos,
+                        kv_len=pos + Sq)
         new_cache = {"k": ck, "v": cv, "pos": pos + Sq}
     out = out.reshape(B, Sq, H * hd)
     if taps is not None:

@@ -39,10 +39,12 @@ Params = dict[str, Any]
 # Layer init / forward per family
 # --------------------------------------------------------------------------
 
-def _attn_block(x, lp, cfg, qcfg, positions, cache, taps, prefix, plan=None):
+def _attn_block(x, lp, cfg, qcfg, positions, cache, taps, prefix, plan=None,
+                use_pallas=False, interpret=None):
     """One attention+MLP layer; ``plan`` is a PlanView scoped to the layer's
     container path (``layers``, ``shared_attn``, …) and narrows to the
-    ``attn``/``mlp`` subtrees here."""
+    ``attn``/``mlp`` subtrees here.  ``use_pallas``/``interpret`` are the
+    decode kernel-routing knobs (models/attention.py vector-pos path)."""
     pv = plan_view(plan)
     x = constrain_act(x)
     h = rmsnorm(x, lp["norm1"])
@@ -53,7 +55,8 @@ def _attn_block(x, lp, cfg, qcfg, positions, cache, taps, prefix, plan=None):
     else:
         a, new_cache = attention(h, lp["attn"], cfg, qcfg, positions, cache,
                                  taps=taps, prefix=prefix + ".attn",
-                                 plan=pv.child("attn"))
+                                 plan=pv.child("attn"), use_pallas=use_pallas,
+                                 interpret=interpret)
     _tap(taps, prefix + ".attn_out", a)
     x = x + a
     h = rmsnorm(x, lp["norm2"])
@@ -284,11 +287,17 @@ def _scan_layers(x, layers, cfg, qcfg, positions, cache_kv, body):
 def forward(params: Params, cfg: ModelConfig, qcfg: QuantConfig | None,
             batch: dict[str, jax.Array], cache: Params | None = None,
             collect_taps: bool = False,
-            compute_dtype=jnp.bfloat16, plan=None) -> dict[str, Any]:
+            compute_dtype=jnp.bfloat16, plan=None, use_pallas: bool = False,
+            interpret: bool | None = None) -> dict[str, Any]:
     """Returns {hidden, logits, cache, taps}.
 
     modes are implicit: cache=None → full-sequence (train / no-cache eval);
     cache given and S>1 → prefill; cache given and S==1 → decode.
+
+    ``use_pallas``/``interpret`` route the per-slot decode attention through
+    the flash-decode kernel (serving engines thread them from the
+    DeployPlan); static at trace time, so they key the jit cache like any
+    other Python argument.
 
     ``plan`` (a resolved :class:`core.plan.QuantPlan`) makes the fake-quant
     forward plan-aware: every qlinear quantizes at its plan bits — the same
@@ -341,7 +350,8 @@ def forward(params: Params, cfg: ModelConfig, qcfg: QuantConfig | None,
             c = None if cs is None else {**cs, "pos": pos}
             h, nc = _attn_block(h, lp, cfg, qcfg, positions, c, taps,
                                 f"L{i}" if i is not None else "L",
-                                plan=pv.child("layers"))
+                                plan=pv.child("layers"),
+                                use_pallas=use_pallas, interpret=interpret)
             if nc is not None:
                 nc = {k: v for k, v in nc.items() if k != "pos"}
             return h, nc
@@ -360,7 +370,9 @@ def forward(params: Params, cfg: ModelConfig, qcfg: QuantConfig | None,
 
     elif fam == "hybrid":
         x, new_cache = _forward_hybrid(params, cfg, qcfg, x, positions,
-                                       cache, taps, pv)
+                                       cache, taps, pv,
+                                       use_pallas=use_pallas,
+                                       interpret=interpret)
 
     h = rmsnorm(x, params["final_norm"])
     if cfg.tie_embeddings:
@@ -374,7 +386,8 @@ def forward(params: Params, cfg: ModelConfig, qcfg: QuantConfig | None,
     return {"hidden": h, "logits": logits, "cache": new_cache, "taps": taps}
 
 
-def _forward_hybrid(params, cfg, qcfg, x, positions, cache, taps, pv):
+def _forward_hybrid(params, cfg, qcfg, x, positions, cache, taps, pv,
+                    use_pallas=False, interpret=None):
     k = cfg.attn_every
     G, r = cfg.n_layers // k, cfg.n_layers % k
     shared = params["shared_attn"]
@@ -392,7 +405,8 @@ def _forward_hybrid(params, cfg, qcfg, x, positions, cache, taps, pv):
             nm_slices.append(nm)
         ac = None if cs is None else {**cs[1], "pos": attn_pos}
         h, na = _attn_block(h, shared, dcfg, qcfg, positions, ac, taps,
-                            "G.attn", plan=pv.child("shared_attn"))
+                            "G.attn", plan=pv.child("shared_attn"),
+                            use_pallas=use_pallas, interpret=interpret)
         nm_stack = (None if mcs is None else
                     jax.tree.map(lambda *s: jnp.stack(s), *nm_slices))
         if na is not None:

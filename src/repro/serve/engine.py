@@ -30,6 +30,7 @@ import jax.numpy as jnp
 
 from ..core.qconfig import QuantConfig
 from ..models import init_cache
+from ..models.attention import decode_route
 from ..models.config import ModelConfig
 from ..train.steps import make_prefill_step, make_slot_decode_step
 from .deploy import (DeployPlan, deploy_view, export_for_layers,
@@ -140,12 +141,30 @@ _INSTALL = jax.jit(_install_step, donate_argnums=(0, 1))
 
 
 @functools.lru_cache(maxsize=32)
-def _serve_steps(cfg: ModelConfig):
+def _serve_steps(cfg: ModelConfig, use_pallas: bool = False,
+                 interpret: bool | None = None):
     """Jitted serving step functions, shared across Engine instances of the
-    same ModelConfig (conformance tests build many engines per config)."""
+    same (ModelConfig, kernel-route) pair (conformance tests build many
+    engines per config, routed and unrouted).  ``use_pallas``/``interpret``
+    come from the engine's DeployPlan and only affect the slot decode step —
+    per-slot prefill is scalar-pos batch-1 and never routes."""
     prefill = jax.jit(make_prefill_step(cfg, None), donate_argnums=(1,))
-    decode = jax.jit(make_slot_decode_step(cfg, None), donate_argnums=(1, 2))
+    decode = jax.jit(
+        make_slot_decode_step(cfg, None, use_pallas=use_pallas,
+                              interpret=interpret),
+        donate_argnums=(1, 2))
     return prefill, decode
+
+
+def _attn_layer_count(cfg: ModelConfig) -> int:
+    """Attention invocations per slot-decode step — the denominator of the
+    kernel-route counters in Engine.stats()."""
+    if cfg.family == "hybrid":
+        # one shared-attn invocation per group of attn_every mamba layers
+        return cfg.n_layers // (cfg.attn_every or 1)
+    if cfg.family in ("dense", "moe", "vlm"):
+        return cfg.n_layers
+    return 0          # ssm: no attention; mla_moe: MLA path, never routes
 
 
 class Engine:
@@ -202,7 +221,8 @@ class Engine:
         self.qcfg = plan.qcfg
         self.params = jax.jit(lambda e: deploy_view(e, plan))(exported)
         self.exported = exported
-        self._prefill, self._decode = _serve_steps(cfg)
+        self._prefill, self._decode = _serve_steps(
+            cfg, bool(plan.use_pallas), plan.interpret)
         # live-buffer accounting (stats()): everything is sized from array
         # shapes+dtypes, so the numbers are machine-independent and cost no
         # device sync.  The per-prefill batch-1 cache is sized via
@@ -251,9 +271,21 @@ class Engine:
         ``peak_live_bytes`` is high-watermarked at every step() (prefill
         concurrency is the only dynamic term; everything else is fixed at
         reset()).
+
+        ``decode_attn_pallas_layers`` / ``decode_attn_ref_layers`` report the
+        per-layer kernel route of the slot decode step: how many attention
+        invocations go through the flash-decode Pallas kernel vs the
+        masked-XLA reference, per models/attention.decode_route — the same
+        predicate the forward uses, so the counters can't drift from the
+        actual trace.
         """
+        n_attn = _attn_layer_count(self.cfg)
+        routed = (n_attn if decode_route(self.cfg, self.scfg.max_len,
+                                         self.plan.use_pallas) else 0)
         live = self._live_bytes()
         return {
+            "decode_attn_pallas_layers": routed,
+            "decode_attn_ref_layers": n_attn - routed,
             "params_bytes": self._params_bytes,
             "artifact_bytes": self._artifact_bytes,
             "slot_cache_bytes": self._cache_bytes,

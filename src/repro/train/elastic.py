@@ -74,9 +74,14 @@ class ElasticRunner:
                 if time.time() - t0 > self.cfg.step_timeout_s:
                     raise StepFailure(f"straggler: step took "
                                       f"{time.time() - t0:.0f}s")
-                if s and s % self.cfg.checkpoint_every == 0:
-                    self.ckpt.save(s, {"state": state}, blocking=False)
                 s += 1
+                # label AFTER incrementing: checkpoint k holds the state with
+                # exactly k completed steps, so restore(k) + re-running steps
+                # k..n-1 replays the no-failure run exactly (the old
+                # pre-increment label was off by one: checkpoint k held k+1
+                # steps and every restore replayed one step twice)
+                if s < steps and s % self.cfg.checkpoint_every == 0:
+                    self.ckpt.save(s, {"state": state}, blocking=False)
             except (StepFailure, jax.errors.JaxRuntimeError) as e:
                 self.restarts += 1
                 self.events.append({"step": s, "error": str(e)})
@@ -86,6 +91,11 @@ class ElasticRunner:
                 mesh = make_elastic_mesh(self._available_devices(),
                                          self.cfg.model_parallel)
                 step_fn = self.build_step(mesh)
+                # drain in-flight async writes BEFORE asking for the latest
+                # step: whether a non-blocking save has landed is a thread
+                # race, and recovery must not depend on its timing (the
+                # source of test_elastic_restart's order-dependent flakes)
+                self.ckpt.wait()
                 last = self.ckpt.latest_step()
                 if last is not None:
                     state = self.ckpt.restore(

@@ -115,7 +115,8 @@ def make_decode_step(cfg: ModelConfig, qcfg: QuantConfig | None, plan=None):
 # ---------------------------------------------------------------------------
 
 def make_slot_decode_step(cfg: ModelConfig, qcfg: QuantConfig | None,
-                          plan=None):
+                          plan=None, use_pallas: bool = False,
+                          interpret: bool | None = None):
     """Slot-masked decode over the full slot pool — ONE shape-stable call.
 
     slot_decode_step(params, cache, state) -> (cache, state, emitted, emit)
@@ -130,6 +131,11 @@ def make_slot_decode_step(cfg: ModelConfig, qcfg: QuantConfig | None,
     Emission order matches the legacy wave engine: the step emits the
     *current* token (prefill's argmax on admission, last step's argmax
     after), updates done from eos/budget, then decodes to produce the next.
+
+    ``use_pallas``/``interpret`` come from the engine's DeployPlan and route
+    the vector-pos decode attention through the flash-decode kernel
+    (models/attention.decode_route); the masked-XLA path is the oracle and
+    the tokens must be bit-identical either way (serve conformance tier).
     """
 
     def slot_decode_step(params, cache, state):
@@ -139,7 +145,8 @@ def make_slot_decode_step(cfg: ModelConfig, qcfg: QuantConfig | None,
         done = done | (emit & (cur == state["eos"])) \
                     | (counts >= state["budget"])
         out = forward(params, cfg, qcfg, {"tokens": cur[:, None]},
-                      cache=cache, plan=plan)
+                      cache=cache, plan=plan, use_pallas=use_pallas,
+                      interpret=interpret)
         new_cur = jnp.argmax(out["logits"][:, -1], -1).astype(jnp.int32)
         new_state = {"cur": new_cur, "done": done, "counts": counts,
                      "budget": state["budget"], "eos": state["eos"]}

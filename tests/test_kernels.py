@@ -6,7 +6,8 @@ import numpy as np
 import pytest
 
 from repro.core.fakequant import pack_int4
-from repro.kernels import (fake_quant_kernel, flash_attention, quant_matmul)
+from repro.kernels import (decode_attention, decode_tiles_ok,
+                           fake_quant_kernel, flash_attention, quant_matmul)
 from repro.kernels import ref
 
 
@@ -18,8 +19,9 @@ from repro.kernels import ref
 ])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("layout", ["channel", "group"])
-def test_quant_matmul_sweep(M, K, N, bm, bn, bk, dtype, layout):
-    """Kernel vs XLA oracle under both scale layouts (rank-1 and group)."""
+@pytest.mark.parametrize("variant", ["int8dot", "dequant"])
+def test_quant_matmul_sweep(M, K, N, bm, bn, bk, dtype, layout, variant):
+    """Both kernel bodies vs XLA oracle under both scale layouts."""
     key = jax.random.PRNGKey(M + K + N)
     x = jax.random.normal(key, (M, K), dtype)
     q4 = jax.random.randint(key, (K, N), -7, 8).astype(jnp.int8)
@@ -31,11 +33,74 @@ def test_quant_matmul_sweep(M, K, N, bm, bn, bk, dtype, layout):
                       ).astype(jnp.float32)
     else:
         swr = jnp.exp(jax.random.normal(key, (N,)) * 0.2).astype(jnp.float32)
-    y = quant_matmul(x, qw, swl, swr, bm=bm, bn=bn, bk=bk, interpret=True)
+    y = quant_matmul(x, qw, swl, swr, bm=bm, bn=bn, bk=bk, interpret=True,
+                     variant=variant)
     yr = ref.quant_matmul_ref(x, qw, swl, swr)
     tol = 2e-5 if dtype == jnp.float32 else 2e-2
     np.testing.assert_allclose(np.asarray(y, np.float32),
                                np.asarray(yr, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("layout", ["layerwise", "channel", "group32",
+                                    "group64", "group128"])
+@pytest.mark.parametrize("variant", ["int8dot", "dequant"])
+def test_quant_matmul_group_sizes(layout, variant):
+    """Every QLayout against the oracle: layerwise (scalar broadcast to [N]),
+    channel [N], group:{32,64,128} [K/g, N] — the CI "Kernel parity" sweep."""
+    key = jax.random.PRNGKey(17)
+    M, K, N = 64, 256, 128
+    x = jax.random.normal(key, (M, K), jnp.float32)
+    q4 = jax.random.randint(key, (K, N), -7, 8).astype(jnp.int8)
+    qw = pack_int4(q4, axis=0)
+    swl = (jnp.exp(jax.random.normal(key, (K,)) * 0.2) * 0.05
+           ).astype(jnp.float32)
+    if layout == "layerwise":
+        swr = jnp.full((N,), 0.013, jnp.float32)      # scalar grid, rank-1 form
+    elif layout == "channel":
+        swr = jnp.exp(jax.random.normal(key, (N,)) * 0.2).astype(jnp.float32)
+    else:
+        g = int(layout.removeprefix("group"))
+        swr = jnp.exp(jax.random.normal(key, (K // g, N)) * 0.2
+                      ).astype(jnp.float32)
+    y = quant_matmul(x, qw, swl, swr, bk=128, interpret=True, variant=variant)
+    yr = ref.quant_matmul_ref(x, qw, swl, swr)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("S,T,Hkv,G,hd,bk", [
+    (3, 64, 2, 2, 16, 64),          # single KV block
+    (5, 128, 2, 2, 8, 32),          # 4 blocks, dead-block skip exercised
+    (4, 256, 1, 4, 32, 128),        # MQA-style grouping
+    (2, 64, 4, 1, 16, 64),          # no grouping (Hkv == H)
+])
+def test_decode_attention_parity(S, T, Hkv, G, hd, bk):
+    """Flash-decode kernel vs the masked-XLA vector-pos oracle (`_sdpa`) at
+    odd per-slot lengths, including a pos=0 slot (length 1: only the token
+    written this step is visible)."""
+    from repro.models.attention import _sdpa
+    assert decode_tiles_ok(T, bk)
+    key = jax.random.PRNGKey(S * T + hd)
+    H = Hkv * G
+    q = jax.random.normal(key, (S, 1, H, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (S, T, Hkv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (S, T, Hkv, hd))
+    # odd lengths: pos=0 (length 1), mid-block, block-aligned, full cache
+    lengths = (jnp.asarray([1, T // 3 + 1, bk, T, T // 2 + 3], jnp.int32)[:S]
+               % (T + 1)).clip(1)
+    o = decode_attention(q[:, 0].reshape(S, Hkv, G, hd), k, v, lengths,
+                         bk=bk, interpret=True)
+    orf = _sdpa(q, k, v, causal=False, q_offset=lengths - 1, kv_len=lengths)
+    np.testing.assert_allclose(
+        np.asarray(o.reshape(S, 1, H, hd)), np.asarray(orf),
+        rtol=2e-5, atol=2e-5)
+
+
+def test_decode_tiles_ok_gate():
+    assert decode_tiles_ok(512) and decode_tiles_ok(64) and decode_tiles_ok(128)
+    assert decode_tiles_ok(96)              # bk clamps to max_len: one block
+    assert not decode_tiles_ok(0)
+    assert not decode_tiles_ok(200, bk=128)  # 200 % 128 != 0: no clean tiling
 
 
 @pytest.mark.parametrize("R,C,bits", [(64, 128, 4), (128, 128, 8), (32, 256, 4)])
@@ -126,4 +191,24 @@ def test_qlinear_deployed_int8_exempt_layer():
     y = qlinear_deployed(x, ex)
     w_eff = dof.effective_weight(p, cfg, compute_dtype=jnp.float32, bits=8)
     np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w_eff),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_qlinear_deployed_int8_exempt_group_layout():
+    """The int8-exempt branch keeps integer weights in the dot with per-group
+    partial sums (mirror of the int8dot kernel restructure) — check it against
+    the explicit dequantize-then-matmul math for a group:[K/g, N] s_wr."""
+    from repro.core.fakequant import expand_group_scale
+    from repro.kernels.ops import qlinear_deployed
+    key = jax.random.PRNGKey(5)
+    K, N, g = 96, 24, 32                      # odd shapes: XLA path, no tiling
+    q = jax.random.randint(key, (K, N), -127, 128).astype(jnp.int8)
+    s_wl = jnp.exp(jax.random.normal(key, (K,)) * 0.2) * 0.05
+    s_wr = jnp.exp(jax.random.normal(jax.random.fold_in(key, 1),
+                                     (K // g, N)) * 0.2)
+    x = jax.random.normal(jax.random.fold_in(key, 2), (7, K), jnp.float32)
+    y = qlinear_deployed(x, {"q": q, "s_wl": s_wl, "s_wr": s_wr})
+    w = q.astype(jnp.float32) * s_wl[:, None] * expand_group_scale(s_wr, K,
+                                                                   axis=0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w),
                                rtol=2e-4, atol=2e-4)

@@ -173,8 +173,11 @@ def test_quant_matmul_group_vs_dense_dequant():
     w = (q4.astype(jnp.float32) * s_wl[:, None]
          * expand_group_scale(s_wg, K, axis=0))
     y = quant_matmul(x, pack_int4(q4, axis=0), s_wl, s_wg, interpret=True)
+    # the int8dot body applies s_wl to x and s_wg to per-group partial sums,
+    # so its f32 rounding order differs from the densely-built oracle's
+    # (exact bit-parity vs ref.quant_matmul_ref is covered in test_kernels)
     np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w),
-                               rtol=2e-5, atol=2e-5)
+                               rtol=1e-3, atol=1e-4)
 
 
 def test_pallas_tiles_ok_group_constraint():

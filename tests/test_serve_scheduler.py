@@ -22,7 +22,7 @@ import pytest
 from repro.core import permissive
 from repro.models import ModelConfig, init_model
 from repro.models.config import MoEConfig, SSMConfig
-from repro.serve.deploy import init_slot_cache
+from repro.serve.deploy import init_slot_cache, make_deploy_plan
 from repro.serve.engine import Engine, Request, Scheduler, ServeConfig
 
 CONFIGS = {
@@ -126,6 +126,71 @@ def test_eos_stops_early_in_any_composition():
                                      eos_id=eos),
                              REQS[3]])
     assert mixed[1] == solo
+
+
+# ---------------------------------------------------------------------------
+# Tentpole PR 7: same conformance with the flash-decode kernel routed in,
+# and Engine.stats() kernel-route counters
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def routed_engine_for(family: str, max_slots: int = 3) -> Engine:
+    """Engine whose DeployPlan routes the slot decode through the Pallas
+    flash-decode kernel (interpret mode on CPU)."""
+    cfg = CONFIGS[family]
+    params = init_model(jax.random.PRNGKey(0), cfg, permissive())
+    plan = make_deploy_plan(permissive(), arch=cfg.name, family=cfg.family,
+                            use_pallas=True, interpret=True, params=params,
+                            model_cfg=cfg)
+    return Engine(cfg, permissive(), params,
+                  ServeConfig(max_slots=max_slots, max_len=64,
+                              prefill_chunk=8), plan=plan)
+
+
+@pytest.mark.parametrize("family", sorted(CONFIGS))
+def test_batch_composition_invariance_with_decode_kernel(family):
+    """The conformance contract must survive the kernel route: per-request
+    tokens identical solo vs batched vs interleaved on the SAME routed
+    engine (slots stay computationally independent inside the kernel —
+    per-slot grid rows, per-slot lengths)."""
+    engine = routed_engine_for(family)
+    ref = []
+    for r in REQS:
+        engine.reset()
+        ref.append(engine.generate([r])[0])
+
+    engine.reset()
+    static = engine.generate(REQS)
+    assert static == ref
+
+    rng = np.random.RandomState(11)
+    order = rng.permutation(len(REQS))
+    engine.reset()
+    rid_of, collected = {}, {}
+    for j in order:
+        rid_of[j] = engine.submit(REQS[j])
+        for _ in range(int(rng.randint(0, 3))):
+            if engine.pending():
+                collected.update(engine.step())
+    while engine.pending():
+        collected.update(engine.step())
+    assert [collected[rid_of[j]] for j in range(len(REQS))] == ref
+
+
+@pytest.mark.parametrize("family", sorted(CONFIGS))
+def test_stats_reports_kernel_route_counters(family):
+    """stats() must expose the per-layer decode-attention route: all
+    attention layers on the Pallas kernel for a routed dense/moe engine,
+    zero for the default (XLA-reference) engine; SSM has no attention to
+    route either way."""
+    n_attn = {"dense": CONFIGS["dense"].n_layers,
+              "moe": CONFIGS["moe"].n_layers, "ssm": 0}[family]
+    routed = routed_engine_for(family).stats()
+    assert routed["decode_attn_pallas_layers"] == n_attn
+    assert routed["decode_attn_ref_layers"] == 0
+    default = engine_for(family).stats()
+    assert default["decode_attn_pallas_layers"] == 0
+    assert default["decode_attn_ref_layers"] == n_attn
 
 
 # ---------------------------------------------------------------------------
