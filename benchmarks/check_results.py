@@ -17,6 +17,10 @@ runs even when the bench itself is what broke):
   work units (benchmarks/kernel_steps.py), never wall time: group:128 must
   cost no more steps than channel, and the int8-dot body must beat the
   f32-dequant baseline.
+- ``--analysis <ANALYSIS_report.json>``: the `python -m repro check --json`
+  static-invariant report — schema + summary consistency + zero
+  error-severity diagnostics (the "Static invariants" CI gate's second
+  half).
 
 With no flags, checks whichever of the default files exist (at least
 one must).  Exit 0 == all checks passed.
@@ -32,6 +36,11 @@ RESULTS = pathlib.Path(__file__).resolve().parent / "results"
 SERVE_DEFAULT = RESULTS / "BENCH_serve.json"
 HISTORY_DEFAULT = RESULTS / "BENCH_history.jsonl"
 KERNELS_DEFAULT = RESULTS / "BENCH_kernels.json"
+ANALYSIS_DEFAULT = RESULTS / "ANALYSIS_report.json"
+
+# the `python -m repro check --json` report schema this validator understands
+# (src/repro/analysis/report.py SCHEMA_VERSION)
+ANALYSIS_SCHEMA = 1
 
 # BENCH_serve.json: row names + per-row required keys (the old heredoc)
 SERVE_ROWS = ("serve.static_batch", "serve.continuous",
@@ -208,6 +217,50 @@ def check_kernels(path: pathlib.Path) -> list[str]:
     return errs
 
 
+def check_analysis(path: pathlib.Path) -> list[str]:
+    """Validate the `python -m repro check --json` report: schema shape +
+    internal summary consistency + zero error-severity diagnostics.  Pure
+    schema work — the analyzer itself already ran; this is the stdlib-only
+    re-assertion CI trusts even if repro imports are broken."""
+    try:
+        rep = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path.name}: unreadable analysis report: {e}"]
+    errs = []
+    if rep.get("schema") != ANALYSIS_SCHEMA:
+        errs.append(f"{path.name}: schema {rep.get('schema')!r} != "
+                    f"{ANALYSIS_SCHEMA}")
+        return errs
+    if rep.get("tool") != "repro-check":
+        errs.append(f"{path.name}: tool {rep.get('tool')!r} != 'repro-check'")
+    diags = rep.get("diagnostics")
+    summary = rep.get("summary")
+    if not isinstance(diags, list) or not isinstance(summary, dict):
+        errs.append(f"{path.name}: diagnostics/summary missing or mis-typed")
+        return errs
+    counts = {"error": 0, "warning": 0, "info": 0, "skip": 0}
+    for i, d in enumerate(diags):
+        if not isinstance(d, dict) or "check" not in d or "message" not in d:
+            errs.append(f"{path.name}: diagnostics[{i}] lacks check/message")
+            continue
+        sev = d.get("severity")
+        if sev not in counts:
+            errs.append(f"{path.name}: diagnostics[{i}] bad severity {sev!r}")
+            continue
+        counts[sev] += 1
+    for sev, key in (("error", "errors"), ("warning", "warnings"),
+                     ("info", "infos"), ("skip", "skips")):
+        if summary.get(key) != counts[sev]:
+            errs.append(f"{path.name}: summary.{key}={summary.get(key)!r} "
+                        f"but {counts[sev]} {sev} diagnostic(s) counted")
+    for d in diags:
+        if isinstance(d, dict) and d.get("severity") == "error":
+            where = d.get("file") or d.get("config") or "<repo>"
+            errs.append(f"{path.name}: [{d.get('check')}] {where}: "
+                        f"{d.get('message')}")
+    return errs
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
     ap.add_argument("--serve", type=pathlib.Path, nargs="?",
@@ -221,6 +274,10 @@ def main(argv: list[str] | None = None) -> int:
                     const=KERNELS_DEFAULT, default=None,
                     help="BENCH_kernels.json to check "
                          f"(default {KERNELS_DEFAULT})")
+    ap.add_argument("--analysis", type=pathlib.Path, nargs="?",
+                    const=ANALYSIS_DEFAULT, default=None,
+                    help="repro-check JSON report to validate "
+                         f"(default {ANALYSIS_DEFAULT})")
     ap.add_argument("--tol", type=float, default=0.25,
                     help="allowed sha-over-sha tok_per_step drop (0.25=25%%)")
     args = ap.parse_args(argv)
@@ -232,6 +289,8 @@ def main(argv: list[str] | None = None) -> int:
         targets.append(("history", args.history))
     if args.kernels is not None:
         targets.append(("kernels", args.kernels))
+    if args.analysis is not None:
+        targets.append(("analysis", args.analysis))
     if not targets:                                  # default: whatever exists
         targets = [(kind, p) for kind, p in
                    (("serve", SERVE_DEFAULT), ("history", HISTORY_DEFAULT),
@@ -244,7 +303,8 @@ def main(argv: list[str] | None = None) -> int:
             return 1
 
     checkers = {"serve": check_serve, "kernels": check_kernels,
-                "history": lambda p: check_history(p, tol=args.tol)}
+                "history": lambda p: check_history(p, tol=args.tol),
+                "analysis": check_analysis}
     errs = []
     for kind, path in targets:
         if not path.exists():
@@ -253,8 +313,12 @@ def main(argv: list[str] | None = None) -> int:
         found = checkers[kind](path)
         errs.extend(found)
         if not found:
-            n = (len(load_history(path)[0]) if kind == "history" else
-                 len(SERVE_ROWS if kind == "serve" else KERNEL_ROWS))
+            if kind == "history":
+                n = len(load_history(path)[0])
+            elif kind == "analysis":
+                n = len(json.loads(path.read_text())["diagnostics"])
+            else:
+                n = len(SERVE_ROWS if kind == "serve" else KERNEL_ROWS)
             print(f"check_results: {path} OK ({kind}, {n} rows)")
     for e in errs:
         print(f"check_results: FAIL: {e}", file=sys.stderr)

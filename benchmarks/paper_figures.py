@@ -244,7 +244,7 @@ def _quantize_cnn(teacher, qcfg, cle=False, bias_correct=True, data=None):
     if bias_correct:
         x = data[0][:256]
         out_fp = forward_cnn(teacher, CNN_CFG, None, x, collect_taps=True)
-        out_q = forward_cnn(params, CNN_CFG, qcfg, x, collect_taps=True)
+        out_q = forward_cnn(params, CNN_CFG, qcfg, x, collect_taps=True)  # qft: noqa[QFT002] paper fig: raw-qcfg grid is the subject
         for i in range(len(params["convs"])):
             diff = (out_fp["taps"][f"conv{i}.out"]["mean"]
                     - out_q["taps"][f"conv{i}.out"]["mean"])
@@ -260,7 +260,7 @@ def _qft_cnn(teacher, params, qcfg, data, steps, base_lr=1e-4):
     state = opt.init(params)
 
     def loss_fn(p, x):
-        fs = forward_cnn(p, CNN_CFG, qcfg, x)["features"]
+        fs = forward_cnn(p, CNN_CFG, qcfg, x)["features"]  # qft: noqa[QFT002] paper fig: raw-qcfg grid is the subject
         ft = forward_cnn(teacher, CNN_CFG, None, x)["features"]
         return backbone_l2(fs.reshape(fs.shape[0], -1, fs.shape[-1]),
                            ft.reshape(ft.shape[0], -1, ft.shape[-1]))

@@ -69,10 +69,10 @@ def _quant_matmul_layout_bench() -> list[dict]:
     steps: dict[str, int] = {}
     for variant in ("int8dot", "dequant"):
         for tag, swr in layouts.items():
-            us = timed(functools.partial(quant_matmul, bk=bk, interpret=True,
+            us = timed(functools.partial(quant_matmul, bk=bk, interpret=True,  # qft: noqa[QFT004] deterministic work units need interpret
                                          variant=variant), x, qw, swl, swr)
             n = pallas_work_units(quant_matmul, x, qw, swl, swr, bk=bk,
-                                  interpret=True, variant=variant)
+                                  interpret=True, variant=variant)  # qft: noqa[QFT004] deterministic work units need interpret
             steps[f"{variant}.{tag}"] = n
             rows.append({"name": ("kernel.quant_matmul.pallas_interpret."
                                   f"{variant}.{tag}"),
@@ -97,10 +97,10 @@ def _quant_matmul_layout_bench() -> list[dict]:
     kc = jax.random.normal(jax.random.fold_in(key, 1), (S, T, Hkv, hd))
     vc = jax.random.normal(jax.random.fold_in(key, 2), (S, T, Hkv, hd))
     lengths = jnp.asarray([17, 128, 300, 512], jnp.int32)
-    us = timed(functools.partial(decode_attention, bk=dbk, interpret=True),
+    us = timed(functools.partial(decode_attention, bk=dbk, interpret=True),  # qft: noqa[QFT004] deterministic work units need interpret
                q, kc, vc, lengths)
     n = pallas_work_units(decode_attention, q, kc, vc, lengths, bk=dbk,
-                          interpret=True)
+                          interpret=True)  # qft: noqa[QFT004] deterministic work units need interpret
     live = sum(-(-int(L) // dbk) * dbk for L in lengths)
     rows.append({"name": "kernel.decode_attention.pallas_interpret",
                  "us_per_call": us, "interp_steps": n,
@@ -188,7 +188,7 @@ def _serve_bench(smoke: bool = False) -> list[dict]:
         queue: list[int] = []                         # static: held-back reqs
         rmap: dict[int, int] = {}                     # rid -> request index
         done_at: dict[int, int] = {}
-        t0 = time.time()
+        t0 = time.time()  # qft: noqa[QFT005] sanctioned wall_s column
         while nxt < n_req or queue or engine.pending():
             while nxt < n_req and arrivals[nxt] <= tick:
                 if wave_batching:
@@ -204,7 +204,7 @@ def _serve_bench(smoke: bool = False) -> list[dict]:
                 for rid in engine.step():
                     done_at[rmap[rid]] = tick
             tick += 1
-        wall = time.time() - t0
+        wall = time.time() - t0  # qft: noqa[QFT005] sanctioned wall_s column
         tokens = sum(r.max_new_tokens for r in reqs)  # eos=-1: full budgets
         lat = [done_at[i] - int(arrivals[i]) for i in range(n_req)]
         return {"steps": tick, "tokens": tokens, "wall_s": round(wall, 3),
@@ -313,15 +313,15 @@ def main(argv: list[str] | None = None) -> int:
             print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
         return 0
     from . import roofline
-    t_all = time.time()
+    t_all = time.time()  # qft: noqa[QFT005] sanctioned wall_s column
     all_rows: list[dict] = []
     errors: list[str] = []
     print("name,us_per_call,derived")
     for name, fn in _benches():
-        t0 = time.time()
+        t0 = time.time()  # qft: noqa[QFT005] sanctioned wall_s column
         try:
             rows = fn()
-            dt = (time.time() - t0) * 1e6
+            dt = (time.time() - t0) * 1e6  # qft: noqa[QFT005] sanctioned wall_s column
             for r in rows:
                 us = r.get("us_per_call", dt / max(len(rows), 1))
                 derived = r.get("derived") or json.dumps(
@@ -351,11 +351,11 @@ def main(argv: list[str] | None = None) -> int:
                / "bench_rows.json")
         out.parent.mkdir(parents=True, exist_ok=True)
         out.write_text(json.dumps(all_rows, indent=1, default=str))
-        print(f"# total {time.time()-t_all:.1f}s; rows -> {out}")
+        print(f"# total {time.time()-t_all:.1f}s; rows -> {out}")  # qft: noqa[QFT005] sanctioned wall_s column
     else:
         # every bench errored (or none ran): a dead [] would shadow the last
         # real run's rows — leave the file alone
-        print(f"# total {time.time()-t_all:.1f}s; no rows, "
+        print(f"# total {time.time()-t_all:.1f}s; no rows, "  # qft: noqa[QFT005] sanctioned wall_s column
               f"bench_rows.json not written")
     if errors:
         print(f"# {len(errors)} bench(es) errored: {', '.join(errors)}")

@@ -83,6 +83,29 @@ def build_parser() -> argparse.ArgumentParser:
     _add_plan_knobs(p)
 
     sub.add_parser("list-configs", help="print every registry entry")
+
+    c = sub.add_parser(
+        "check", help="static invariant analyzer + QFT lint (repro.analysis)")
+    c.add_argument("--config", action="append", default=[],
+                   help="registry entry to trace-check; repeatable "
+                        "(default with --all-configs: every entry)")
+    c.add_argument("--all-configs", action="store_true",
+                   help="trace-check every registry config")
+    c.add_argument("--lint-only", action="store_true",
+                   help="skip the jaxpr layer (fast, no tracing)")
+    c.add_argument("--trace-only", action="store_true",
+                   help="skip the AST lint layer")
+    c.add_argument("--paths", nargs="*", default=None,
+                   help="files/dirs to lint, repo-root-relative "
+                        "(default: src/repro benchmarks)")
+    c.add_argument("--prefill-budget", type=int, default=None,
+                   help="fail if a config's prefill recompile surface "
+                        "exceeds this many distinct programs")
+    c.add_argument("--json", default=None, metavar="PATH",
+                   help="write the machine-readable report "
+                        "(benchmarks/check_results.py --analysis)")
+    c.add_argument("-v", "--verbose", action="store_true",
+                   help="print info/skip diagnostics, not just problems")
     return ap
 
 
@@ -202,6 +225,43 @@ def cmd_list_configs() -> int:
     return 0
 
 
+def cmd_check(args: argparse.Namespace) -> int:
+    from ..analysis import run_check
+    if args.lint_only and args.trace_only:
+        print("check: --lint-only and --trace-only are mutually exclusive",
+              file=sys.stderr)
+        return 2
+    configs = None
+    if not args.all_configs and args.config:
+        try:
+            configs = [_canon_arch(c) for c in args.config]
+        except KeyError as e:
+            print(f"check: unknown config {e.args[0]!r}", file=sys.stderr)
+            return 2
+    elif not args.all_configs and not args.lint_only:
+        # an unscoped trace run is the --all-configs run; make that explicit
+        configs = None
+    report = run_check(configs=configs,
+                       lint_paths_arg=args.paths,
+                       trace=not args.lint_only,
+                       lint=not args.trace_only,
+                       prefill_budget=args.prefill_budget)
+    if args.json:
+        report.write_json(args.json)
+    print(report.format(verbose=args.verbose))
+    return 0 if report.ok() else 1
+
+
+def _canon_arch(name: str) -> str:
+    """Accept both registry ('qwen3-8b') and module ('qwen3_8b') spellings."""
+    if name in registry._MODULES:
+        return name
+    for arch, module in registry._MODULES.items():
+        if module == name:
+            return arch
+    raise KeyError(name)
+
+
 def main(argv=None) -> int:
     args = build_parser().parse_args(argv)
     if args.command == "quantize":
@@ -210,6 +270,8 @@ def main(argv=None) -> int:
         return cmd_plan(args)
     if args.command == "list-configs":
         return cmd_list_configs()
+    if args.command == "check":
+        return cmd_check(args)
     return 2
 
 

@@ -271,6 +271,34 @@ def export_for_layers(params: Params, plan_or_qcfg) -> Params:
     return out
 
 
+def abstract_deploy_surfaces(cfg, qcfg: QuantConfig,
+                             use_pallas: bool = False,
+                             interpret: bool | None = None,
+                             dtype=jnp.bfloat16):
+    """eval_shape the whole init → export → deploy_view chain (no
+    allocation; works at 100B scale) for the static analyzer.
+
+    Returns ``(plan, exported_avals, deployed_avals)`` where ``plan`` is the
+    DeployPlan with a QuantPlan resolved over the abstract init tree — the
+    same resolution path the Engine constructor takes with real params.
+    """
+    from ..models import init_model
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    params = jax.eval_shape(lambda k: init_model(k, cfg, qcfg), key)
+    plan = make_deploy_plan(qcfg, arch=getattr(cfg, "name", ""),
+                            family=cfg.family, use_pallas=use_pallas,
+                            interpret=interpret, params=params,
+                            model_cfg=cfg)
+
+    def build(k):
+        p = init_model(k, cfg, qcfg)
+        ex = export_for_layers(p, plan)
+        return ex, deploy_view(ex, plan, dtype)
+
+    exported, deployed = jax.eval_shape(build, key)
+    return plan, exported, deployed
+
+
 def find_exported_linears(tree, prefix: tuple = ()) -> list[tuple]:
     """Paths of every exported *linear* ({q, s_wr} with a matmul-shaped q —
     convs are 4-D and excluded) in an artifact tree."""

@@ -156,6 +156,35 @@ def _serve_steps(cfg: ModelConfig, use_pallas: bool = False,
     return prefill, decode
 
 
+def serve_trace_surfaces(cfg: ModelConfig, plan: DeployPlan | None = None,
+                         scfg: ServeConfig | None = None) -> dict:
+    """Abstract serving surfaces for the static analyzer (repro.analysis).
+
+    Returns the *un-jitted* step functions the engine compiles in
+    ``_serve_steps`` plus ShapeDtypeStruct avals for every input (slot cache
+    + decode state), so ``jax.make_jaxpr`` can prove structural invariants —
+    one host-transfer surface per decode step, kernel routing vs
+    ``decode_route`` — for any registry config without building an Engine,
+    allocating a cache, or touching a device.
+    """
+    scfg = scfg if scfg is not None else ServeConfig()
+    use_pallas = bool(plan.use_pallas) if plan is not None else False
+    interpret = plan.interpret if plan is not None else None
+    S = scfg.max_slots
+    decode_fn = make_slot_decode_step(cfg, None, use_pallas=use_pallas,
+                                      interpret=interpret)
+    prefill_fn = make_prefill_step(cfg, None)
+    cache = jax.eval_shape(lambda: init_slot_cache(cfg, S, scfg.max_len))
+    i32 = jnp.int32
+    state = {"cur": jax.ShapeDtypeStruct((S,), i32),
+             "done": jax.ShapeDtypeStruct((S,), jnp.bool_),
+             "counts": jax.ShapeDtypeStruct((S,), i32),
+             "budget": jax.ShapeDtypeStruct((S,), i32),
+             "eos": jax.ShapeDtypeStruct((S,), i32)}
+    return {"decode_fn": decode_fn, "prefill_fn": prefill_fn,
+            "cache": cache, "state": state, "scfg": scfg}
+
+
 def _attn_layer_count(cfg: ModelConfig) -> int:
     """Attention invocations per slot-decode step — the denominator of the
     kernel-route counters in Engine.stats()."""
@@ -374,7 +403,7 @@ class Engine:
         if self._alive:
             self.cache, self.state, emitted, emit = self._decode(
                 self.params, self.cache, self.state)
-            toks_h, emit_h, done_h = jax.device_get(
+            toks_h, emit_h, done_h = jax.device_get(  # qft: noqa[QFT003]
                 (emitted, emit, self.state["done"]))  # the step's ONE sync
             for slot in sorted(self._alive):
                 rid = self.sched.running[slot]

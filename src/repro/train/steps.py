@@ -13,9 +13,20 @@ import jax.numpy as jnp
 
 from ..core.distill import qft_loss
 from ..core.qconfig import QuantConfig
-from ..models import forward
+from ..models import forward, init_model
 from ..models.config import ModelConfig
 from ..optim.adam import Adam
+
+
+def abstract_train_state(cfg: ModelConfig, qcfg: QuantConfig | None,
+                         opt: Adam):
+    """ShapeDtypeStruct stand-ins for (student, opt_state) — what the static
+    analyzer (repro.analysis) traces ``make_train_step`` against.  The
+    teacher tree shares the student's avals.  No allocation."""
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    student = jax.eval_shape(lambda k: init_model(k, cfg, qcfg), key)
+    opt_state = jax.eval_shape(opt.init, student)
+    return student, opt_state
 
 
 def make_train_step(cfg: ModelConfig, qcfg: QuantConfig | None, opt: Adam,

@@ -33,7 +33,7 @@ def test_quant_matmul_sweep(M, K, N, bm, bn, bk, dtype, layout, variant):
                       ).astype(jnp.float32)
     else:
         swr = jnp.exp(jax.random.normal(key, (N,)) * 0.2).astype(jnp.float32)
-    y = quant_matmul(x, qw, swl, swr, bm=bm, bn=bn, bk=bk, interpret=True,
+    y = quant_matmul(x, qw, swl, swr, bm=bm, bn=bn, bk=bk, interpret=True,  # qft: noqa[QFT004] parity oracle
                      variant=variant)
     yr = ref.quant_matmul_ref(x, qw, swl, swr)
     tol = 2e-5 if dtype == jnp.float32 else 2e-2
@@ -62,7 +62,7 @@ def test_quant_matmul_group_sizes(layout, variant):
         g = int(layout.removeprefix("group"))
         swr = jnp.exp(jax.random.normal(key, (K // g, N)) * 0.2
                       ).astype(jnp.float32)
-    y = quant_matmul(x, qw, swl, swr, bk=128, interpret=True, variant=variant)
+    y = quant_matmul(x, qw, swl, swr, bk=128, interpret=True, variant=variant)  # qft: noqa[QFT004] parity oracle
     yr = ref.quant_matmul_ref(x, qw, swl, swr)
     np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
                                rtol=2e-5, atol=2e-5)
@@ -89,7 +89,7 @@ def test_decode_attention_parity(S, T, Hkv, G, hd, bk):
     lengths = (jnp.asarray([1, T // 3 + 1, bk, T, T // 2 + 3], jnp.int32)[:S]
                % (T + 1)).clip(1)
     o = decode_attention(q[:, 0].reshape(S, Hkv, G, hd), k, v, lengths,
-                         bk=bk, interpret=True)
+                         bk=bk, interpret=True)  # qft: noqa[QFT004] parity oracle
     orf = _sdpa(q, k, v, causal=False, q_offset=lengths - 1, kv_len=lengths)
     np.testing.assert_allclose(
         np.asarray(o.reshape(S, 1, H, hd)), np.asarray(orf),
@@ -129,7 +129,7 @@ def test_flash_attention_sweep(S, hd, bq, bk, causal):
     key = jax.random.PRNGKey(S + hd)
     q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (2, S, hd))
                for i in range(3))
-    o = flash_attention(q, k, v, causal=causal, bq=bq, bk=bk, interpret=True)
+    o = flash_attention(q, k, v, causal=causal, bq=bq, bk=bk, interpret=True)  # qft: noqa[QFT004] parity oracle
     orf = ref.flash_attention_ref(q, k, v, causal=causal)
     np.testing.assert_allclose(np.asarray(o), np.asarray(orf),
                                rtol=2e-4, atol=2e-5)
@@ -139,7 +139,7 @@ def test_flash_attention_bf16():
     key = jax.random.PRNGKey(7)
     q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (2, 128, 64),
                                  jnp.bfloat16) for i in range(3))
-    o = flash_attention(q, k, v, causal=True, bq=64, bk=64, interpret=True)
+    o = flash_attention(q, k, v, causal=True, bq=64, bk=64, interpret=True)  # qft: noqa[QFT004] parity oracle
     orf = ref.flash_attention_ref(q, k, v, causal=True)
     np.testing.assert_allclose(np.asarray(o, np.float32),
                                np.asarray(orf, np.float32), rtol=3e-2, atol=3e-2)
@@ -155,7 +155,7 @@ def test_qlinear_deployed_matches_effective_weight():
     p = dof.mmse_init_qlinear(p, cfg)
     x = jax.random.normal(key, (8, 64), jnp.float32)
     ex = dof.export_qlinear(p, cfg)
-    y_kernel = qlinear_deployed(x, ex, use_pallas=True, interpret=True)
+    y_kernel = qlinear_deployed(x, ex, use_pallas=True, interpret=True)  # qft: noqa[QFT004] parity oracle
     w_eff = dof.effective_weight(p, cfg, compute_dtype=jnp.float32)
     np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(x @ w_eff),
                                rtol=2e-4, atol=2e-4)
@@ -171,7 +171,7 @@ def test_qlinear_deployed_consumes_deploy_plan():
     p = dof.mmse_init_qlinear(dof.init_qlinear(key, 64, 32, cfg), cfg)
     x = jax.random.normal(key, (4, 64), jnp.float32)
     ex = dof.export_qlinear(p, cfg)
-    plan = make_deploy_plan(cfg, use_pallas=True, interpret=True)
+    plan = make_deploy_plan(cfg, use_pallas=True, interpret=True)  # qft: noqa[QFT004] parity oracle
     y_plan = qlinear_deployed(x, ex, plan=plan)
     w_eff = dof.effective_weight(p, cfg, compute_dtype=jnp.float32)
     np.testing.assert_allclose(np.asarray(y_plan), np.asarray(x @ w_eff),

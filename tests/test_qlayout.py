@@ -172,7 +172,7 @@ def test_quant_matmul_group_vs_dense_dequant():
     s_wg = jnp.exp(jax.random.normal(key, (K // g, N)) * 0.3)
     w = (q4.astype(jnp.float32) * s_wl[:, None]
          * expand_group_scale(s_wg, K, axis=0))
-    y = quant_matmul(x, pack_int4(q4, axis=0), s_wl, s_wg, interpret=True)
+    y = quant_matmul(x, pack_int4(q4, axis=0), s_wl, s_wg, interpret=True)  # qft: noqa[QFT004] parity oracle
     # the int8dot body applies s_wl to x and s_wg to per-group partial sums,
     # so its f32 rounding order differs from the densely-built oracle's
     # (exact bit-parity vs ref.quant_matmul_ref is covered in test_kernels)
@@ -199,7 +199,7 @@ def test_qlinear_deployed_layouts_match_effective(spec):
     x = jax.random.normal(key, (8, 256), jnp.float32)
     log_sa = jax.random.normal(jax.random.PRNGKey(1), (256,)) * 0.1
     ex = export_qlinear(p, cfg, log_sa_in=log_sa)
-    plan = make_deploy_plan(cfg, use_pallas=True, interpret=True)
+    plan = make_deploy_plan(cfg, use_pallas=True, interpret=True)  # qft: noqa[QFT004] parity oracle
     y = qlinear_deployed(x, ex, plan=plan)
     w_eff = effective_weight(p, cfg, log_sa, compute_dtype=jnp.float32)
     np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w_eff),

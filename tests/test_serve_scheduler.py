@@ -140,7 +140,7 @@ def routed_engine_for(family: str, max_slots: int = 3) -> Engine:
     cfg = CONFIGS[family]
     params = init_model(jax.random.PRNGKey(0), cfg, permissive())
     plan = make_deploy_plan(permissive(), arch=cfg.name, family=cfg.family,
-                            use_pallas=True, interpret=True, params=params,
+                            use_pallas=True, interpret=None, params=params,
                             model_cfg=cfg)
     return Engine(cfg, permissive(), params,
                   ServeConfig(max_slots=max_slots, max_len=64,
@@ -228,11 +228,35 @@ def test_init_slot_cache_vectorizes_pos():
 # Satellite: PR 2's device-side decode bookkeeping — one transfer per step
 # ---------------------------------------------------------------------------
 
+@pytest.mark.parametrize("family", sorted(CONFIGS))
 @pytest.mark.parametrize("max_slots", [1, 5])
-def test_decode_loop_one_host_transfer_per_step(monkeypatch, max_slots):
-    engine = engine_for("dense", max_slots=max_slots)
+def test_decode_step_one_transfer_surface(family, max_slots):
+    """Structural proof of the one-transfer invariant: the traced decode
+    jaxpr has exactly one host-transfer surface (the output fetch; zero
+    callback primitives), for every family x slot count — no engine built,
+    nothing run.  Replaces the monkeypatch-counted device_get regression
+    test; test_decode_loop_runtime_transfer_sentinel below keeps one
+    runtime probe alive so this analyzer cannot rot into vacuity."""
+    from repro.analysis.jaxpr_checks import transfer_surfaces
+    from repro.serve.deploy import abstract_deploy_surfaces
+    from repro.serve.engine import serve_trace_surfaces
+
+    cfg = CONFIGS[family]
+    scfg = ServeConfig(max_slots=max_slots, max_len=64, prefill_chunk=8)
+    plan, _ex, deployed = abstract_deploy_surfaces(cfg, permissive())
+    s = serve_trace_surfaces(cfg, plan=plan, scfg=scfg)
+    closed = jax.make_jaxpr(s["decode_fn"])(deployed, s["cache"], s["state"])
+    assert transfer_surfaces(closed) == 1
+
+
+def test_decode_loop_runtime_transfer_sentinel(monkeypatch):
+    """Runtime sentinel for the structural check above: count actual
+    jax.device_get calls for one (family, slot count) cell.  If the engine
+    ever moves its sync off jax.device_get (where the analyzer counts
+    callback primitives instead), this still fails loudly."""
+    engine = engine_for("dense", max_slots=3)
     engine.reset()
-    for _ in range(max_slots + 1):               # overfill: queueing too
+    for _ in range(4):                           # overfill: queueing too
         engine.submit(Request(prompt=[1, 2], max_new_tokens=4))
     calls = [0]
     real = jax.device_get
