@@ -71,8 +71,10 @@ HISTORY_SCHEMA: dict[str, type | tuple[type, ...]] = {
     "peak_live_buffer_bytes": int,
 }
 # the columns two same-sha runs must reproduce byte-identically (wall_s and
-# ts are informational and excluded)
-DETERMINISTIC_KEYS = tuple(HISTORY_SCHEMA)
+# ts are informational and excluded).  tokens_crc32 — the fingerprint of the
+# decoded streams, seeded-sampling determinism included — is deterministic
+# but optional in the schema: rows predating it stay valid.
+DETERMINISTIC_KEYS = tuple(HISTORY_SCHEMA) + ("tokens_crc32",)
 
 
 def validate_history_row(row: dict) -> list[str]:

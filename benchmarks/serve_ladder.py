@@ -15,6 +15,13 @@ wall-clock, so rows are deterministic and machine-independent — two runs
 at the same sha append byte-identical metric columns (``wall_s``/``ts``
 are informational only; see check_results.DETERMINISTIC_KEYS).
 
+Each rung additionally appends one SEEDED-SAMPLING row (trace
+``poisson+sampled``): the same workload decoded with per-request
+temperature/top_k/top_p/seed.  Budgets stay eos-free, so its step count
+matches the greedy row exactly (device-side sampling adds zero scheduler
+steps), and the ``tokens_crc32`` fingerprint of the emitted streams makes
+seeded determinism a tracked, regression-gated property.
+
 Usage::
 
     PYTHONPATH=src python -m benchmarks.serve_ladder --smoke   # 2 rungs, CI
@@ -99,12 +106,21 @@ def _bench_model():
 
 
 def bench_rung(rung: Rung, trace_kind: str, *, cfg=None, params=None,
-               sha: str | None = None) -> dict:
+               sha: str | None = None, sampled: bool = False) -> dict:
     """Serve one (rung, trace) workload to completion; return a history row.
 
     Continuous batching only — the static-wave comparison lives in
     run.py's ``--serve-smoke`` (BENCH_serve.json); the ladder tracks the
     shipped engine's trajectory across scales.
+
+    ``sampled=True`` re-runs the workload with per-request seeded sampling
+    (temperature/top_k/top_p drawn from the trace seed, eos still
+    budget-driven so step counts match the greedy row exactly — sampling
+    adds ZERO scheduler steps by construction).  The row lands under trace
+    ``<kind>+sampled`` so regression grouping never mixes the modes, and
+    carries a ``tokens_crc32`` of the emitted streams: byte-identical
+    across re-runs at the same sha, making seeded-sampling determinism a
+    tracked property rather than a one-off test assertion.
     """
     import numpy as np
     from repro.core import permissive
@@ -120,15 +136,27 @@ def bench_rung(rung: Rung, trace_kind: str, *, cfg=None, params=None,
                        prefill_chunk=rung.prefill_chunk)
     engine = Engine(cfg, permissive(), params, scfg)
     tok_rng = np.random.RandomState(seed + 1)
+
+    def sampling_kwargs(i: int) -> dict:
+        if not sampled:
+            return {}
+        # seeded per-request knobs: deterministic for the (rung, trace)
+        return {"temperature": round(0.7 + 0.05 * (i % 8), 2),
+                "top_k": (0, 8, 32)[i % 3],
+                "top_p": (1.0, 0.9, 0.95)[i % 3],
+                "seed": seed + i}
+
     reqs = [Request(prompt=[int(t) for t in
                             tok_rng.randint(1, cfg.vocab, it.prompt_len)],
-                    max_new_tokens=it.new_tokens)    # eos=-1: budget-driven
-            for it in trace]
+                    max_new_tokens=it.new_tokens,    # eos=-1: budget-driven
+                    **sampling_kwargs(i))
+            for i, it in enumerate(trace)]
 
     t0 = time.time()  # qft: noqa[QFT005] sanctioned wall_s column
     tick, nxt = 0, 0
     rmap: dict[int, int] = {}                        # rid -> trace index
     done_at: dict[int, int] = {}
+    streams: dict[int, list[int]] = {}               # trace index -> tokens
     qdepth: list[int] = []
     while nxt < len(trace) or engine.pending():
         while nxt < len(trace) and trace[nxt].arrival <= tick:
@@ -136,20 +164,26 @@ def bench_rung(rung: Rung, trace_kind: str, *, cfg=None, params=None,
             nxt += 1
         qdepth.append(engine.stats()["queue_depth"])  # pre-step backlog
         if engine.pending():
-            for rid in engine.step():
+            for rid, toks in engine.step().items():
                 done_at[rmap[rid]] = tick
+                streams[rmap[rid]] = toks
         tick += 1
     wall = time.time() - t0  # qft: noqa[QFT005] sanctioned wall_s column
 
     stats = engine.stats()
     lat = sorted(done_at[i] - trace[i].arrival for i in range(len(trace)))
     tokens = sum(it.new_tokens for it in trace)
+    # crc over every emitted stream in trace order: one deterministic
+    # fingerprint of WHAT was decoded, not just how fast
+    crc = zlib.crc32(json.dumps([streams[i] for i in
+                                 range(len(trace))]).encode()) % (2 ** 31)
     return {
         "schema": SCHEMA_VERSION,
         "sha": sha if sha is not None else git_sha(),
         "rung": rung.name,
-        "trace": trace_kind,
-        "mode": "continuous",
+        "trace": f"{trace_kind}+sampled" if sampled else trace_kind,
+        "mode": "continuous-sampled" if sampled else "continuous",
+        "tokens_crc32": crc,
         "max_slots": rung.max_slots,
         "max_len": rung.max_len,
         "prefill_chunk": rung.prefill_chunk,
@@ -194,6 +228,11 @@ def run(smoke: bool = False, rungs: tuple[Rung, ...] | None = None,
     sha = git_sha()
     rows = [bench_rung(rung, kind, cfg=cfg, params=params, sha=sha)
             for rung in rungs for kind in traces]
+    # one seeded-sampling row per rung (poisson workload): tracks that
+    # sampling stays step-neutral and that seeded streams stay deterministic
+    if "poisson" in traces:
+        rows += [bench_rung(rung, "poisson", cfg=cfg, params=params,
+                            sha=sha, sampled=True) for rung in rungs]
     if append:
         append_history(rows, history)
     return rows

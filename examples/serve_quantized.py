@@ -4,8 +4,9 @@
 
 Exports the deployment artifact (int4-packed weights), builds the serving
 engine (prefill + decode with donated KV caches) and runs a batch of
-requests.  The same engine backs the decode/prefill dry-run cells; on TPU
-the matmuls route through kernels/quant_matmul.py.
+requests — greedy and seeded-sampled — then streams one request's tokens
+as they land.  The same engine backs the decode/prefill dry-run cells; on
+TPU the matmuls route through kernels/quant_matmul.py.
 """
 import time
 
@@ -29,7 +30,10 @@ def main():
 
     requests = [
         Request(prompt=[1, 17, 42, 256], max_new_tokens=12),
-        Request(prompt=[5, 9], max_new_tokens=8),
+        # seeded sampling: same (request, seed) -> same tokens, whatever
+        # shares the batch
+        Request(prompt=[5, 9], max_new_tokens=8, temperature=0.8,
+                top_p=0.95, seed=42),
         Request(prompt=[100, 200, 300, 400, 500], max_new_tokens=10),
     ]
     t0 = time.time()
@@ -37,9 +41,18 @@ def main():
     dt = time.time() - t0
     n_tok = sum(len(o) for o in outs)
     for i, o in enumerate(outs):
-        print(f"req{i}: prompt={requests[i].prompt} -> {o}")
+        kind = "sampled" if requests[i].temperature > 0 else "greedy"
+        print(f"req{i} ({kind}): prompt={requests[i].prompt} -> {o}")
     print(f"{n_tok} tokens in {dt:.2f}s ({n_tok/dt:.1f} tok/s, 3 requests "
           f"continuously batched over 2 slots on CPU)")
+
+    # streaming: tokens arrive as the engine emits them
+    stream = engine.stream(Request(prompt=[7, 21], max_new_tokens=8,
+                                   temperature=1.0, seed=7))
+    print("streamed:", end="", flush=True)
+    for tok in stream:
+        print(f" {tok}", end="", flush=True)
+    print()
 
 
 if __name__ == "__main__":

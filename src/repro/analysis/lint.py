@@ -14,7 +14,12 @@ QFT003  host sync inside jitted serve/decode code: ``jax.device_get``,
         ``.item()``, ``.block_until_ready()``, ``np.asarray``/``np.array``
         (plus ``int()``/``float()`` on traced values inside ``*_step``
         bodies).  The serve loop's budget is ONE transfer per step; every
-        extra surface must be visible and deliberately suppressed.
+        extra surface must be visible and deliberately suppressed.  Also
+        under QFT003: host-side ``np.random.*`` draws inside a ``*_step``
+        body — the draw runs ONCE at trace time and bakes a constant into
+        the compiled step, silently breaking per-request seeded sampling
+        (device draws go through ``jax.random`` with an explicit key,
+        core/sampling.py).
 QFT004  hardcoded ``interpret=True/False`` instead of the backend
         auto-select ``None`` (``kernels.quant_matmul.default_interpret``).
 QFT005  wall-clock or unseeded randomness in ``benchmarks/`` outside the
@@ -268,6 +273,18 @@ class _Visitor(ast.NodeVisitor):
                 self._emit("QFT003", node,
                            f"`{dotted}` forces a device→host copy inside "
                            f"{self._scope} serve/decode code")
+            elif self._scope == "traced" \
+                    and dotted.split(".")[0] in ("np", "numpy") \
+                    and "random" in dotted.split(".")[1:]:
+                # np.random.<draw> (or a RandomState method chain) inside a
+                # traced step: the host draw happens once at trace time and
+                # bakes a CONSTANT into the compiled step — tokens stop
+                # depending on the request seed.  Device draws must go
+                # through jax.random with an explicit key.
+                self._emit("QFT003", node,
+                           f"host RNG `{dotted}` inside a traced step — the "
+                           "draw bakes a trace-time constant; use jax.random "
+                           "with a keyed draw (core/sampling.py)")
             elif self._scope == "traced" and isinstance(node.func, ast.Name) \
                     and node.func.id in ("int", "float") and len(node.args) == 1 \
                     and not isinstance(node.args[0], ast.Constant):

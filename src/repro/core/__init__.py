@@ -11,6 +11,8 @@ from .dof import (init_stream, init_qlinear, qlinear, effective_weight,
                   apq_init_qlinear, export_qlinear, dequantize_export,
                   swr_layout_kind)
 from .cle import cle_factors, apply_cle_to_stream
+from .sampling import sample_token, sample_tokens, split_keys, top_k_mask, \
+    top_p_mask
 from .distill import backbone_l2, logits_ce, qft_loss
 from .policy import select_exempt_layers, bits_for_layer
 from .plan import (QuantPlan, TensorSpec, resolve_plan, apply_plan,

@@ -1,0 +1,119 @@
+"""Device-side stochastic decoding primitives for the serving engine.
+
+One function, :func:`sample_token`, maps ``(logits [V], key, temperature,
+top_k, top_p) -> token`` entirely on device, so the categorical draw can
+live *inside* the jitted slot-decode step (train/steps.make_slot_decode_step)
+without adding a host-transfer surface — the engine's one-transfer-per-step
+invariant survives sampling untouched (proved structurally by
+``repro check trace.one-transfer``).
+
+Semantics (all knobs per request, all disabled by default):
+
+temperature  ``0`` (the default) is exact greedy argmax — the degenerate
+             path through the SAME traced step, selected with ``jnp.where``
+             so greedy and sampled requests share one compiled program.
+             ``> 0`` scales logits by ``1/temperature`` before truncation.
+top_k        keep the ``k`` highest-logit tokens (``0`` disables).  Ties at
+             the k-th logit are all kept, so the support is a function of
+             the logit VALUES, not of sort order — draws cannot depend on
+             how a sort broke a tie.
+top_p        keep the smallest prefix of probability-sorted tokens whose
+             mass reaches ``p`` (``1.0`` disables), then renormalize over
+             that support (implicitly, via the categorical over masked
+             logits).  Tokens tied with the boundary probability are all
+             kept, same rationale as top_k.
+
+Determinism: every draw is keyed.  The per-request chain starts at
+``jax.random.PRNGKey(request.seed)``; the engine splits it once per emitted
+token (install consumes the first split for the prefill draw, each decode
+step one more).  A request's k-th token therefore depends only on its own
+(logits, seed, k) — never on batch composition — which is what the sampling
+conformance tier (tests/test_serve_scheduler.py) asserts bit-exactly.
+
+All ops are element-wise/sort/cumsum + ``jax.random`` (threefry) — pure
+device computation, jit/vmap-invariant: ``vmap(sample_token)`` over stacked
+slots draws exactly what per-slot calls would (tests/test_sampling.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+#: temperature floor for the scaled-logits path; the greedy branch is
+#: selected by ``temperature > 0`` so this never changes a returned token,
+#: it only keeps the dead sampled branch finite at temperature == 0
+_TEMP_FLOOR = 1e-6
+
+_NEG_INF = float("-inf")
+
+
+def top_k_mask(logits: jax.Array, k: jax.Array | int) -> jax.Array:
+    """Logits with everything below the k-th largest masked to ``-inf``.
+
+    ``k <= 0`` or ``k >= vocab`` disables the mask.  ``k`` may be a traced
+    scalar (per-slot values under vmap) — the k-th value is fetched with a
+    dynamic gather, not a static index.  Ties at the k-th logit are kept.
+    """
+    v = logits.shape[-1]
+    k = jnp.asarray(k, jnp.int32)
+    kth = jnp.take(jnp.sort(logits, axis=-1)[..., ::-1],
+                   jnp.clip(k - 1, 0, v - 1), axis=-1)
+    active = (k > 0) & (k < v)
+    return jnp.where(~active | (logits >= kth), logits, _NEG_INF)
+
+
+def top_p_mask(logits: jax.Array, p: jax.Array | float) -> jax.Array:
+    """Logits outside the top-p (nucleus) support masked to ``-inf``.
+
+    The support is the shortest probability-sorted prefix with cumulative
+    mass >= ``p`` — the boundary token that crosses ``p`` is included, and
+    so is every token TIED with the boundary probability (the support is
+    defined by a probability threshold, never by sort position).  ``p >= 1``
+    disables the mask; ``p <= 0`` degenerates to the single most-probable
+    token.  The categorical over the masked logits renormalizes the kept
+    mass implicitly.
+    """
+    p = jnp.asarray(p, logits.dtype)
+    probs = jax.nn.softmax(logits, axis=-1)
+    sorted_p = jnp.sort(probs, axis=-1)[..., ::-1]
+    cum = jnp.cumsum(sorted_p, axis=-1)
+    # sorted position i is in the prefix iff the mass BEFORE it is < p;
+    # maximum() keeps the argmax in-support even at p == 0
+    prefix = (cum - sorted_p) < jnp.maximum(p, _TEMP_FLOOR)
+    # probability threshold: the smallest kept probability (ties included)
+    p_min = jnp.min(jnp.where(prefix, sorted_p, jnp.inf), axis=-1,
+                    keepdims=True)
+    return jnp.where((p >= 1.0) | (probs >= p_min), logits, _NEG_INF)
+
+
+def sample_token(logits: jax.Array, key: jax.Array,
+                 temperature: jax.Array | float,
+                 top_k: jax.Array | int = 0,
+                 top_p: jax.Array | float = 1.0) -> jax.Array:
+    """One next-token draw from one slot's logits ``[V]`` (int32 scalar).
+
+    ``temperature == 0`` returns the exact argmax (bit-identical to the
+    pre-sampling greedy engine); ``> 0`` draws from the temperature-scaled,
+    top-k- then top-p-truncated categorical.  Everything stays on device.
+    """
+    temperature = jnp.asarray(temperature, jnp.float32)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits.astype(jnp.float32) / jnp.maximum(temperature, _TEMP_FLOOR)
+    masked = top_p_mask(top_k_mask(scaled, top_k), top_p)
+    drawn = jax.random.categorical(key, masked, axis=-1).astype(jnp.int32)
+    return jnp.where(temperature > 0.0, drawn, greedy)
+
+
+#: slot-vectorized draw: ``(logits [S, V], keys [S, 2], temperature [S],
+#: top_k [S], top_p [S]) -> tokens [S]`` — what the slot-decode step calls.
+#: vmap guarantees each slot's draw is exactly the per-slot sample_token
+#: (jax.random ops are vmap-invariant over per-element keys), so batch
+#: composition cannot leak into any slot's token stream.
+sample_tokens = jax.vmap(sample_token)
+
+
+def split_keys(keys: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Advance a ``[S, 2]`` uint32 per-slot key matrix one step: returns
+    ``(draw_keys [S, 2], next_keys [S, 2])``."""
+    pairs = jax.vmap(lambda k: jax.random.split(k, 2))(keys)
+    return pairs[:, 0], pairs[:, 1]

@@ -74,6 +74,17 @@ def main() -> None:
                     help="decode slot pool size (continuous batching)")
     ap.add_argument("--prefill-chunk", type=int, default=32,
                     help="prompt tokens prefilled per slot per step")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy, the default)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k truncation (0 disables)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus (top-p) truncation (1.0 disables)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="per-request sampling seed (same seed → same tokens)")
+    ap.add_argument("--stream", action="store_true",
+                    help="print tokens as they are emitted (Engine.stream) "
+                         "instead of waiting for full completions")
     args = ap.parse_args()
     if args.arch in ("paper-cnn", "paper_cnn"):
         print("error: paper-cnn is a classifier — it has no token-serving "
@@ -117,10 +128,25 @@ def main() -> None:
         cfg, result.plan, artifact,
         ServeConfig(max_slots=args.max_slots, max_len=128,
                     prefill_chunk=args.prefill_chunk))
-    outs = engine.generate([Request(prompt=[1, 2, 3], max_new_tokens=8),
-                            Request(prompt=[4, 5], max_new_tokens=8)])
-    for i, o in enumerate(outs):
-        print(f"req{i}: {o}")
+    sampling = dict(temperature=args.temperature, top_k=args.top_k,
+                    top_p=args.top_p)
+    reqs = [Request(prompt=[1, 2, 3], max_new_tokens=8,
+                    seed=args.seed, **sampling),
+            Request(prompt=[4, 5], max_new_tokens=8,
+                    seed=args.seed + 1, **sampling)]
+    if args.stream:
+        # streams drive the engine themselves; drain them in order — later
+        # streams buffer whatever lands while an earlier one is iterated
+        streams = [engine.stream(r) for r in reqs]
+        for i, ts in enumerate(streams):
+            print(f"req{i}:", end="", flush=True)
+            for tok in ts:
+                print(f" {tok}", end="", flush=True)
+            print()
+    else:
+        outs = engine.generate(reqs)
+        for i, o in enumerate(outs):
+            print(f"req{i}: {o}")
 
 
 if __name__ == "__main__":

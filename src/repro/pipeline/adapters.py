@@ -199,11 +199,18 @@ class TransformerAdapter:
             cfg, plan, artifact,
             ServeConfig(max_slots=self.pcfg.serve_max_slots, max_len=64,
                         prefill_chunk=self.pcfg.serve_prefill_chunk))
-        outs = engine.generate([Request(prompt=[1, 2, 3], max_new_tokens=8),
-                                Request(prompt=[4, 5], max_new_tokens=4)])
+        pcfg = self.pcfg
+        sampling = dict(temperature=pcfg.serve_temperature,
+                        top_k=pcfg.serve_top_k, top_p=pcfg.serve_top_p)
+        outs = engine.generate(
+            [Request(prompt=[1, 2, 3], max_new_tokens=8,
+                     seed=pcfg.serve_seed, **sampling),
+             Request(prompt=[4, 5], max_new_tokens=4,
+                     seed=pcfg.serve_seed + 1, **sampling)])
         assert len(outs) == 2 and len(outs[0]) == 8 and len(outs[1]) == 4
         return {"requests": 2, "tokens": sum(len(o) for o in outs),
-                "max_slots": engine.scfg.max_slots}
+                "max_slots": engine.scfg.max_slots,
+                "temperature": pcfg.serve_temperature}
 
 
 # ---------------------------------------------------------------------------

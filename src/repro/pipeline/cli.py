@@ -63,6 +63,14 @@ def build_parser() -> argparse.ArgumentParser:
                    help="serve smoke: decode slot pool size")
     q.add_argument("--prefill-chunk", type=int, default=32,
                    help="serve smoke: prompt tokens prefilled per step")
+    q.add_argument("--serve-temperature", type=float, default=0.0,
+                   help="serve smoke: sampling temperature (0 = greedy)")
+    q.add_argument("--serve-top-k", type=int, default=0,
+                   help="serve smoke: top-k truncation (0 disables)")
+    q.add_argument("--serve-top-p", type=float, default=1.0,
+                   help="serve smoke: nucleus truncation (1.0 disables)")
+    q.add_argument("--serve-seed", type=int, default=0,
+                   help="serve smoke: per-request sampling seed root")
     q.add_argument("--use-pallas", action="store_true",
                    help="route deployed matmuls through kernels/quant_matmul")
     _add_plan_knobs(q)
@@ -145,7 +153,10 @@ def _pcfg_from_args(args: argparse.Namespace) -> PipelineConfig:
         calib_batch_size=args.calib_batch_size, workdir=args.workdir,
         resume=not args.no_resume, stop_after=args.stop_after,
         serve_smoke=args.serve_smoke, serve_max_slots=args.max_slots,
-        serve_prefill_chunk=args.prefill_chunk, use_pallas=args.use_pallas,
+        serve_prefill_chunk=args.prefill_chunk,
+        serve_temperature=args.serve_temperature,
+        serve_top_k=args.serve_top_k, serve_top_p=args.serve_top_p,
+        serve_seed=args.serve_seed, use_pallas=args.use_pallas,
         log_every=max(args.steps // 6, 1))
 
 

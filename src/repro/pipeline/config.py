@@ -61,6 +61,10 @@ class PipelineConfig:
     serve_smoke: bool = False         # transformer families: run the engine
     serve_max_slots: int = 4          # engine decode slot pool
     serve_prefill_chunk: int = 32     # prompt tokens prefilled per step
+    serve_temperature: float = 0.0    # smoke sampling (0 = greedy)
+    serve_top_k: int = 0              # smoke top-k truncation (0 disables)
+    serve_top_p: float = 1.0          # smoke nucleus truncation (1 disables)
+    serve_seed: int = 0               # smoke per-request sampling seed root
     use_pallas: bool = False          # route deployed matmuls through Pallas
     # orchestration
     workdir: str | None = None        # enables per-stage checkpoint + resume

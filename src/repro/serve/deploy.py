@@ -170,6 +170,37 @@ def init_slot_cache(cfg, max_slots: int, max_len: int,
     return jax.tree_util.tree_map_with_path(fix, cache)
 
 
+def init_slot_state(max_slots: int) -> Params:
+    """Per-slot decode bookkeeping + sampling state, all device-resident.
+
+    One leaf per slot-vectorized degree of freedom of the slot-decode step
+    (train/steps.make_slot_decode_step):
+
+    - ``cur/done/counts/budget/eos`` — the PR 5 decode bookkeeping (current
+      token, finished flag, emission count, token budget, stop token);
+    - ``key [S, 2]`` — per-slot PRNG key chain (uint32 threefry keys),
+      installed from ``PRNGKey(request.seed)`` at admission and split once
+      per decode step, so draws are a function of (seed, step) only;
+    - ``temp/top_k/top_p [S]`` — per-slot sampling parameters, written at
+      admission from the Request.  The zeros/ones defaults are the greedy
+      degenerate values, so a freshly reset pool decodes greedily.
+
+    Keeping ALL of this in one device tree is what lets the engine run its
+    decode loop with exactly one host transfer per step regardless of slot
+    count or sampling configuration.
+    """
+    S = max_slots
+    return {"cur": jnp.zeros((S,), jnp.int32),
+            "done": jnp.ones((S,), bool),
+            "counts": jnp.zeros((S,), jnp.int32),
+            "budget": jnp.zeros((S,), jnp.int32),
+            "eos": jnp.full((S,), -1, jnp.int32),
+            "key": jnp.zeros((S, 2), jnp.uint32),
+            "temp": jnp.zeros((S,), jnp.float32),
+            "top_k": jnp.zeros((S,), jnp.int32),
+            "top_p": jnp.ones((S,), jnp.float32)}
+
+
 def _stream_log_sa(name: str, parent: Params):
     sname = STREAM_OF.get(name)
     stream = parent.get(sname) if sname else None

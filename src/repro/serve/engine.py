@@ -15,8 +15,17 @@ a request's output tokens are bit-identical whether it is served alone, in
 a static batch, or interleaved under continuous batching — the conformance
 contract of tests/test_serve_scheduler.py.
 
+Decoding is per-request seeded sampling (core/sampling.py): each Request
+carries ``temperature/top_k/top_p/seed``, the categorical draw runs
+device-side inside the jitted slot-decode step (per-slot PRNG key chains
+ride the slot state), and ``temperature=0`` — the default — is exact greedy
+through the same compiled program.  Tokens can be consumed as they land via
+``Engine.stream`` (per-rid iterator) or a ``submit(on_token=...)`` callback;
+both transfer token ownership to the consumer the way ``step()`` transfers
+finished results, so a long-running server's memory stays bounded.
+
 Weights are the deployment artifact (int4-packed) from serve/deploy.py; on
-TPU the matmuls route through kernels/quant_matmul.  Greedy decoding.
+TPU the matmuls route through kernels/quant_matmul.
 """
 from __future__ import annotations
 
@@ -24,24 +33,35 @@ import collections
 import dataclasses
 import functools
 import math
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
 from ..core.qconfig import QuantConfig
+from ..core.sampling import sample_token
 from ..models import init_cache
 from ..models.attention import decode_route
 from ..models.config import ModelConfig
 from ..train.steps import make_prefill_step, make_slot_decode_step
 from .deploy import (DeployPlan, deploy_view, export_for_layers,
-                     init_slot_cache, make_deploy_plan, plan_from_artifact)
+                     init_slot_cache, init_slot_state, make_deploy_plan,
+                     plan_from_artifact)
 
 
 @dataclasses.dataclass
 class Request:
+    """One serving request.  The sampling knobs are per request and default
+    to exact greedy (``temperature=0``); ``seed`` makes sampled decoding
+    bit-reproducible — the same request with the same seed emits the same
+    tokens regardless of what shares the batch (conformance tier)."""
     prompt: list[int]
     max_new_tokens: int = 32
     eos_id: int = -1                  # -1: never stop early
+    temperature: float = 0.0          # 0: greedy argmax (exact)
+    top_k: int = 0                    # 0: disabled
+    top_p: float = 1.0                # 1: disabled
+    seed: int = 0                     # PRNG chain root for sampled draws
     rid: int | None = None            # arrival order; assigned by submit()
 
 
@@ -109,10 +129,13 @@ class Scheduler:
 
 
 def _install_step(cache, state, slot_cache, slot, last_logits, plen,
-                  budget, eos):
+                  budget, eos, temperature, top_k, top_p, seed):
     """Scatter a finished batch-1 prefill into slot row ``slot`` of the big
-    cache and activate the slot (first token = greedy argmax of the last
-    prompt logits).  The whole slot row is overwritten, so any garbage the
+    cache and activate the slot.  The request's PRNG chain is rooted here:
+    ``PRNGKey(seed)`` splits into the first draw (the prefill's next-token
+    sample — greedy argmax when ``temperature == 0``) and the carry key the
+    decode step advances, so a request's k-th token is a function of its own
+    (seed, k) only.  The whole slot row is overwritten, so any garbage the
     masked decode wrote into a dead slot is erased on admission."""
 
     def leaf(path, big, small):
@@ -128,12 +151,20 @@ def _install_step(cache, state, slot_cache, slot, last_logits, plen,
                                             start)
 
     cache = jax.tree_util.tree_map_with_path(leaf, cache, slot_cache)
-    first = jnp.argmax(last_logits, -1).astype(jnp.int32)
+    draw, carry = jax.random.split(jax.random.PRNGKey(seed))
+    first = sample_token(last_logits, draw, temperature, top_k, top_p)
     state = {"cur": state["cur"].at[slot].set(first),
              "done": state["done"].at[slot].set(False),
              "counts": state["counts"].at[slot].set(0),
              "budget": state["budget"].at[slot].set(budget),
-             "eos": state["eos"].at[slot].set(eos)}
+             "eos": state["eos"].at[slot].set(eos),
+             "key": state["key"].at[slot].set(carry),
+             "temp": state["temp"].at[slot].set(
+                 jnp.asarray(temperature, jnp.float32)),
+             "top_k": state["top_k"].at[slot].set(
+                 jnp.asarray(top_k, jnp.int32)),
+             "top_p": state["top_p"].at[slot].set(
+                 jnp.asarray(top_p, jnp.float32))}
     return cache, state
 
 
@@ -175,12 +206,10 @@ def serve_trace_surfaces(cfg: ModelConfig, plan: DeployPlan | None = None,
                                       interpret=interpret)
     prefill_fn = make_prefill_step(cfg, None)
     cache = jax.eval_shape(lambda: init_slot_cache(cfg, S, scfg.max_len))
-    i32 = jnp.int32
-    state = {"cur": jax.ShapeDtypeStruct((S,), i32),
-             "done": jax.ShapeDtypeStruct((S,), jnp.bool_),
-             "counts": jax.ShapeDtypeStruct((S,), i32),
-             "budget": jax.ShapeDtypeStruct((S,), i32),
-             "eos": jax.ShapeDtypeStruct((S,), i32)}
+    # eval_shape over the real initializer: the analyzer's avals can never
+    # drift from the state the engine actually feeds the decode step (the
+    # sampling leaves — key/temp/top_k/top_p — ride along automatically)
+    state = jax.eval_shape(lambda: init_slot_state(S))
     return {"decode_fn": decode_fn, "prefill_fn": prefill_fn,
             "cache": cache, "state": state, "scfg": scfg}
 
@@ -196,6 +225,58 @@ def _attn_layer_count(cfg: ModelConfig) -> int:
     return 0          # ssm: no attention; mla_moe: MLA path, never routes
 
 
+class TokenStream:
+    """Iterator over one request's tokens, in emission order.
+
+    Returned by :meth:`Engine.stream`.  Iterating drives the engine — when
+    the buffer is empty and the request hasn't finished, ``__next__`` runs
+    ``engine.step()`` ticks until a token lands (requests finished by those
+    ticks for OTHER callers are stashed in the engine's collected store, so
+    a foreign ``generate()``/``result()`` still sees them).  Token ownership
+    transfers to the stream at emission: the engine keeps no copy, and the
+    engine's reference to the stream is dropped once the final token is
+    buffered — a long-running server's memory stays bounded no matter how
+    many streams have completed.  The iterator yields exactly the token list
+    ``generate()`` would have returned for the same request.
+    """
+
+    def __init__(self, engine: "Engine", rid: int):
+        self._engine = engine
+        self.rid = rid
+        self._buf: collections.deque[int] = collections.deque()
+        self._finished = False
+
+    @property
+    def finished(self) -> bool:
+        """True once the final token was emitted (it may still be buffered
+        here, un-iterated — ``finished`` is about the engine, not the
+        iterator)."""
+        return self._finished
+
+    def _push(self, token: int, fin: bool) -> None:
+        """Engine-side delivery of one emitted token (``fin``: the last)."""
+        self._buf.append(token)
+        self._finished = self._finished or fin
+
+    def __iter__(self) -> "TokenStream":
+        return self
+
+    def __next__(self) -> int:
+        steps = 0
+        # same wedge guard as Engine.generate: all outstanding work serially
+        limit = 64 + 2 * sum(self._engine._work.values())
+        while not self._buf:
+            if self._finished:
+                raise StopIteration
+            self._engine._step_collecting()
+            steps += 1
+            if steps > limit:
+                raise RuntimeError(
+                    f"stream for rid {self.rid} made no progress after "
+                    f"{steps} engine steps")
+        return self._buf.popleft()
+
+
 class Engine:
     """Serves a deployment artifact under its DeployPlan.
 
@@ -203,9 +284,11 @@ class Engine:
     pipeline path — from an already-exported artifact via ``from_artifact``.
 
     The serving API is ``submit`` (enqueue, returns an arrival-ordered
-    request id) + ``step`` (one scheduler tick: admissions, one prefill
-    chunk per prefilling slot, one masked decode step; returns the requests
-    finished this tick).  ``generate`` is a thin submit-all-then-drain.
+    request id; pass ``on_token`` to consume tokens as they land) + ``step``
+    (one scheduler tick: admissions, one prefill chunk per prefilling slot,
+    one masked decode step; returns the requests finished this tick).
+    ``stream`` submits and returns a :class:`TokenStream` iterator;
+    ``generate`` is a thin submit-all-then-drain.
     """
 
     def __init__(self, cfg: ModelConfig, qcfg: QuantConfig, student_params,
@@ -269,16 +352,14 @@ class Engine:
         S = self.scfg.max_slots
         self.sched = Scheduler(S)
         self.cache = init_slot_cache(self.cfg, S, self.scfg.max_len)
-        self.state = {"cur": jnp.zeros((S,), jnp.int32),
-                      "done": jnp.ones((S,), bool),
-                      "counts": jnp.zeros((S,), jnp.int32),
-                      "budget": jnp.zeros((S,), jnp.int32),
-                      "eos": jnp.full((S,), -1, jnp.int32)}
+        self.state = init_slot_state(S)
         self._prefilling: dict[int, dict] = {}    # slot -> prefill progress
         self._alive: set[int] = set()
         self._results: dict[int, list[int]] = {}  # in-flight token streams
         self._collected: dict[int, list[int]] = {}  # finished, drained by a
                                                     # foreign generate() call
+        self._consumers: dict[int, TokenStream | Callable[[int, bool], None]]\
+            = {}                                  # rid -> stream / callback
         self._work: dict[int, int] = {}           # rid -> step-count estimate
         self._cache_bytes = _tree_bytes(self.cache) + _tree_bytes(self.state)
         self._peak_live_bytes = (self._params_bytes + self._artifact_bytes
@@ -342,15 +423,48 @@ class Engine:
                 f"request needs {need} cache positions ({len(p)} prompt + "
                 f"{request.max_new_tokens} new) but ServeConfig.max_len is "
                 f"{self.scfg.max_len}; raise max_len or shorten the request")
+        if not (request.temperature >= 0.0
+                and math.isfinite(request.temperature)):
+            raise ValueError(
+                f"temperature must be finite and >= 0 (0 = greedy), got "
+                f"{request.temperature}")
+        if request.top_k < 0:
+            raise ValueError(
+                f"top_k must be >= 0 (0 disables), got {request.top_k}")
+        if not (0.0 < request.top_p <= 1.0):
+            raise ValueError(
+                f"top_p must be in (0, 1] (1 disables), got {request.top_p}")
 
-    def submit(self, request: Request) -> int:
-        """Enqueue a request; returns its arrival-ordered id."""
+    def _enqueue(self, request: Request) -> int:
         self._validate(request)
         rid = self.sched.submit(request)
-        self._results[rid] = []
         self._work[rid] = (-(-len(request.prompt) // self.scfg.prefill_chunk)
                            + request.max_new_tokens)
         return rid
+
+    def submit(self, request: Request,
+               on_token: Callable[[int, bool], None] | None = None) -> int:
+        """Enqueue a request; returns its arrival-ordered id.
+
+        With ``on_token``, every emitted token is pushed to the callback as
+        ``on_token(token, done)`` (``done`` true on the final token) instead
+        of being buffered — the engine keeps no copy and the finished
+        request does NOT appear in ``step()``'s returned dict (ownership
+        went to the callback)."""
+        rid = self._enqueue(request)
+        if on_token is not None:
+            self._consumers[rid] = on_token
+        else:
+            self._results[rid] = []
+        return rid
+
+    def stream(self, request: Request) -> TokenStream:
+        """Submit ``request`` and return a :class:`TokenStream` yielding its
+        tokens in emission order (iteration drives the engine as needed)."""
+        rid = self._enqueue(request)
+        ts = TokenStream(self, rid)
+        self._consumers[rid] = ts
+        return ts
 
     def pending(self) -> int:
         """Submitted-but-unfinished request count (drive step() while > 0)."""
@@ -395,7 +509,8 @@ class Engine:
             if st["off"] == len(req.prompt):
                 self.cache, self.state = _INSTALL(
                     self.cache, self.state, st["cache"], slot, logits[0],
-                    len(req.prompt), req.max_new_tokens, req.eos_id)
+                    len(req.prompt), req.max_new_tokens, req.eos_id,
+                    req.temperature, req.top_k, req.top_p, req.seed)
                 self._alive.add(slot)
                 del self._prefilling[slot]
 
@@ -408,13 +523,42 @@ class Engine:
             for slot in sorted(self._alive):
                 rid = self.sched.running[slot]
                 if emit_h[slot]:
-                    self._results[rid].append(int(toks_h[slot]))
+                    self._deliver(rid, int(toks_h[slot]), bool(done_h[slot]))
                 if done_h[slot]:
                     self.sched.evict(slot)
                     self._alive.discard(slot)
                     del self._work[rid]
-                    finished[rid] = self._results.pop(rid)
+                    toks = self._finish_rid(rid)
+                    if toks is not None:
+                        finished[rid] = toks
         return finished
+
+    def _deliver(self, rid: int, token: int, fin: bool) -> None:
+        """Route one emitted token: stream buffer / callback for consumer
+        rids, the engine-owned in-flight list otherwise."""
+        consumer = self._consumers.get(rid)
+        if consumer is None:
+            self._results[rid].append(token)
+        elif isinstance(consumer, TokenStream):
+            consumer._push(token, fin)
+        else:
+            consumer(token, fin)
+
+    def _finish_rid(self, rid: int) -> list[int] | None:
+        """Release a finished rid.  Consumer rids already own every token —
+        drop the engine's consumer reference (bounded memory) and return
+        None so step() does not re-report them; buffered rids hand their
+        token list to the step() caller."""
+        if self._consumers.pop(rid, None) is not None:
+            return None
+        return self._results.pop(rid)
+
+    def _step_collecting(self) -> None:
+        """One tick with any finished buffered requests stashed in the
+        collected store — what a TokenStream uses to drive the engine, so
+        requests it finishes for other callers stay retrievable via
+        ``result()``."""
+        self._collected.update(self.step())
 
     def generate(self, requests: list[Request]) -> list[list[int]]:
         """Serve a list of requests to completion (submit-all + drain).

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from ..core.distill import qft_loss
 from ..core.qconfig import QuantConfig
+from ..core.sampling import sample_tokens, split_keys
 from ..models import forward, init_model
 from ..models.config import ModelConfig
 from ..optim.adam import Adam
@@ -132,16 +133,25 @@ def make_slot_decode_step(cfg: ModelConfig, qcfg: QuantConfig | None,
 
     slot_decode_step(params, cache, state) -> (cache, state, emitted, emit)
 
-    ``state``: {cur [S], done [S], counts [S], budget [S], eos [S]} — all
-    device-resident, so the engine's decode loop needs exactly one host
-    transfer per step (fetch (emitted, emit, done)) regardless of slot count.
-    Dead slots (done) still run through the forward — keeping the decode
-    shape static across admissions/evictions — but their emissions are
-    masked and their bookkeeping frozen.
+    ``state``: {cur [S], done [S], counts [S], budget [S], eos [S],
+    key [S, 2], temp [S], top_k [S], top_p [S]} — all device-resident, so
+    the engine's decode loop needs exactly one host transfer per step
+    (fetch (emitted, emit, done)) regardless of slot count.  Dead slots
+    (done) still run through the forward — keeping the decode shape static
+    across admissions/evictions — but their emissions are masked and their
+    bookkeeping frozen.
 
     Emission order matches the legacy wave engine: the step emits the
-    *current* token (prefill's argmax on admission, last step's argmax
-    after), updates done from eos/budget, then decodes to produce the next.
+    *current* token (prefill's draw on admission, last step's draw after),
+    updates done from eos/budget, then decodes to produce the next.
+
+    The next token is drawn DEVICE-SIDE (core/sampling.sample_tokens) from
+    each slot's own PRNG key, temperature, top_k and top_p — the per-slot
+    key splits once per step, so a request's k-th draw depends only on its
+    own (seed, k) and never on batch composition.  ``temp == 0`` (the
+    Request default) is exact greedy argmax through this same traced step;
+    the categorical adds zero host-transfer surfaces (the one-transfer
+    invariant is re-proved over this step by ``repro check``).
 
     ``use_pallas``/``interpret`` come from the engine's DeployPlan and route
     the vector-pos decode attention through the flash-decode kernel
@@ -158,9 +168,14 @@ def make_slot_decode_step(cfg: ModelConfig, qcfg: QuantConfig | None,
         out = forward(params, cfg, qcfg, {"tokens": cur[:, None]},
                       cache=cache, plan=plan, use_pallas=use_pallas,
                       interpret=interpret)
-        new_cur = jnp.argmax(out["logits"][:, -1], -1).astype(jnp.int32)
+        draw_keys, next_keys = split_keys(state["key"])
+        new_cur = sample_tokens(out["logits"][:, -1], draw_keys,
+                                state["temp"], state["top_k"],
+                                state["top_p"])
         new_state = {"cur": new_cur, "done": done, "counts": counts,
-                     "budget": state["budget"], "eos": state["eos"]}
+                     "budget": state["budget"], "eos": state["eos"],
+                     "key": next_keys, "temp": state["temp"],
+                     "top_k": state["top_k"], "top_p": state["top_p"]}
         return out["cache"], new_state, cur, emit
 
     return slot_decode_step

@@ -19,6 +19,7 @@ import json
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from benchmarks.check_results import check_analysis
@@ -69,6 +70,39 @@ def test_injected_second_host_transfer_is_caught():
         # the injected violation: a host round-trip on the emitted token
         cur = jax.pure_callback(
             lambda t: t, jax.ShapeDtypeStruct(cur.shape, cur.dtype), cur)
+        return cache, state, cur, emit
+
+    closed = jax.make_jaxpr(leaky_decode)(deployed, s["cache"], s["state"])
+    assert callback_count(closed) == 1
+    assert transfer_surfaces(closed) == 2
+
+
+def test_decode_step_contains_device_rng():
+    """Non-vacuity for the sampling tentpole: the decode trace must carry
+    the device-side PRNG (random_split for the per-slot key chain,
+    random_bits for the categorical) — if sampling ever silently degraded
+    to a trace-time host draw, these ops would vanish from the jaxpr."""
+    s, deployed = _decode_surfaces()
+    closed = jax.make_jaxpr(s["decode_fn"])(deployed, s["cache"], s["state"])
+    text = str(closed)
+    assert "random_split" in text and "random_bits" in text
+
+
+def test_injected_host_rng_draw_is_caught():
+    """The smuggling vector the lint rule (QFT003, source level) and this
+    structural gate close together: a host np.random draw pushed into the
+    decode step via pure_callback.  The callback IS a second transfer
+    surface — trace.one-transfer fails before the nondeterminism could
+    ship."""
+    s, deployed = _decode_surfaces()
+
+    def leaky_decode(params, cache, state):
+        cache, state, cur, emit = s["decode_fn"](params, cache, state)
+        # the injected violation: "resample" the token on the host
+        cur = jax.pure_callback(
+            lambda t: np.random.randint(  # qft: noqa[QFT003]
+                0, 64, t.shape).astype(t.dtype),
+            jax.ShapeDtypeStruct(cur.shape, cur.dtype), cur)
         return cache, state, cur, emit
 
     closed = jax.make_jaxpr(leaky_decode)(deployed, s["cache"], s["state"])
@@ -197,6 +231,31 @@ def test_qft003_host_sync_in_traced_step():
     assert _ids(diags) == ["QFT003"]
     # rule is scoped to serve/train: same code elsewhere is not flagged
     assert lint_source(src, "src/repro/kernels/foo.py") == []
+
+
+def test_qft003_host_rng_in_traced_step():
+    """np.random inside a ``*_step`` body: the draw happens once at trace
+    time and bakes a constant into the compiled step — flagged at the
+    source level (the structural twin is
+    test_injected_host_rng_draw_is_caught)."""
+    src = ("def make_thing(cfg):\n"
+           "    def thing_step(params, state):\n"
+           "        noise = np.random.normal(size=state.shape)\n"
+           "        return state + noise\n"
+           "    return thing_step\n")
+    diags = lint_source(src, "src/repro/train/foo.py")
+    assert _ids(diags) == ["QFT003"]
+    assert "trace-time constant" in diags[0].message
+    # suppressible, like every qft rule
+    assert lint_source(src.replace(
+        "state.shape)", "state.shape)  # qft: noqa[QFT003]"),
+        "src/repro/train/foo.py") == []
+    # jax.random draws (keyed, device-side) are the sanctioned path
+    keyed = ("def make_thing(cfg):\n"
+             "    def thing_step(params, state, key):\n"
+             "        return state + jax.random.normal(key, state.shape)\n"
+             "    return thing_step\n")
+    assert lint_source(keyed, "src/repro/train/foo.py") == []
 
 
 def test_qft003_engine_host_loop():

@@ -10,6 +10,15 @@ and keeping decode slots computationally independent — see DESIGN.md
 Also here: the Scheduler's FIFO/refill bookkeeping, the one-host-transfer-
 per-decode-step regression guard (PR 2's device-side bookkeeping), request
 validation errors, and a hypothesis no-starvation property.
+
+PR 9 extends the contract to SEEDED SAMPLING (per-request temperature /
+top_k / top_p / seed, drawn device-side inside the same jitted step): a
+sampled request's tokens are bit-identical solo vs static-batch vs
+interleaved, the same seed twice reproduces, different seeds diverge
+(non-vacuity), and eos still stops a sampled stream early in any
+composition.  The token-streaming consumer API (Engine.stream /
+submit(on_token=...)) is covered at the end: emission order, ownership
+transfer, bounded memory.
 """
 import functools
 import math
@@ -345,6 +354,200 @@ except ImportError:      # not the whole conformance module
         @staticmethod
         def data():
             return None
+
+
+# ---------------------------------------------------------------------------
+# Tentpole PR 9: seeded-sampling conformance — the batch-composition
+# contract extended to stochastic decoding
+# ---------------------------------------------------------------------------
+
+# per-request sampling configs exercising every knob (and their stacking);
+# seeds far apart so accidental chain collisions can't mask a bug
+SAMPLED_REQS = [
+    Request(prompt=[1, 2, 3], max_new_tokens=5, temperature=0.9, seed=11),
+    Request(prompt=[7, 8], max_new_tokens=3, temperature=1.3, top_k=8,
+            seed=22),
+    Request(prompt=list(range(1, 12)), max_new_tokens=4, temperature=0.7,
+            top_p=0.85, seed=33),
+    Request(prompt=[5, 4, 3, 2, 1], max_new_tokens=6, temperature=1.0,
+            top_k=16, top_p=0.9, seed=44),
+    Request(prompt=[9, 9], max_new_tokens=5, temperature=0.8, seed=55),
+]
+
+
+@pytest.mark.parametrize("family", sorted(CONFIGS))
+def test_sampled_batch_composition_invariance(family):
+    """A SAMPLED request's tokens are bit-identical solo, in a static
+    batch, and interleaved under random arrivals: each slot's draw comes
+    from its own (seed, step) key chain, so co-tenants cannot perturb it."""
+    engine = engine_for(family)
+    ref = []
+    for r in SAMPLED_REQS:
+        engine.reset()
+        ref.append(engine.generate([r])[0])
+
+    engine.reset()
+    static = engine.generate(SAMPLED_REQS)
+    assert static == ref
+
+    rng = np.random.RandomState(13)
+    order = rng.permutation(len(SAMPLED_REQS))
+    engine.reset()
+    rid_of, collected = {}, {}
+    for j in order:
+        rid_of[j] = engine.submit(SAMPLED_REQS[j])
+        for _ in range(int(rng.randint(0, 3))):
+            if engine.pending():
+                collected.update(engine.step())
+    while engine.pending():
+        collected.update(engine.step())
+    assert [collected[rid_of[j]] for j in range(len(SAMPLED_REQS))] == ref
+
+
+def test_sampling_seeded_reproducible_and_nonvacuous():
+    """Same seed twice → identical tokens; different seed → different
+    tokens; and the sampled stream differs from greedy — proving the
+    categorical actually draws (the tier can't silently pass with sampling
+    wired to argmax)."""
+    engine = engine_for("dense")
+
+    def run(**kw):
+        engine.reset()
+        return engine.generate([Request(prompt=[1, 2, 3], max_new_tokens=8,
+                                        **kw)])[0]
+
+    a = run(temperature=1.0, seed=3)
+    b = run(temperature=1.0, seed=3)
+    assert a == b                                  # bit-reproducible
+    c = run(temperature=1.0, seed=4)
+    assert c != a                                  # seed actually matters
+    greedy = run()
+    assert a != greedy or c != greedy              # draws are not argmax
+
+
+def test_sampled_eos_stops_early_in_any_composition():
+    """eos fired by a SAMPLED token keeps its early stop solo and mixed —
+    the done bookkeeping sees the drawn token, not the argmax."""
+    engine = engine_for("dense")
+    engine.reset()
+    base = engine.generate([Request(prompt=[3, 1], max_new_tokens=8,
+                                    temperature=1.1, seed=17)])[0]
+    eos = base[2]
+    stopper = Request(prompt=[3, 1], max_new_tokens=8, temperature=1.1,
+                      seed=17, eos_id=eos)
+    engine.reset()
+    solo = engine.generate([stopper])[0]
+    assert len(solo) < 8 and solo[-1] == eos
+    engine.reset()
+    mixed = engine.generate([SAMPLED_REQS[0], stopper, REQS[3]])
+    assert mixed[1] == solo
+
+
+def test_sampling_param_validation():
+    engine = engine_for("dense")
+    engine.reset()
+    with pytest.raises(ValueError, match="temperature"):
+        engine.submit(Request(prompt=[1], temperature=-0.5))
+    with pytest.raises(ValueError, match="temperature"):
+        engine.submit(Request(prompt=[1], temperature=float("nan")))
+    with pytest.raises(ValueError, match="top_k"):
+        engine.submit(Request(prompt=[1], top_k=-1))
+    with pytest.raises(ValueError, match="top_p"):
+        engine.submit(Request(prompt=[1], top_p=0.0))
+    with pytest.raises(ValueError, match="top_p"):
+        engine.submit(Request(prompt=[1], top_p=1.5))
+    assert engine.pending() == 0
+
+
+# ---------------------------------------------------------------------------
+# Satellite PR 9: token streaming — per-rid iterators + on_token callbacks
+# ---------------------------------------------------------------------------
+
+def test_stream_tokens_match_generate():
+    """Iterating a TokenStream yields tokens in emission order and the
+    concatenation is exactly what generate() returns for the same request —
+    for both a sampled and a greedy request sharing the engine."""
+    engine = engine_for("dense")
+    engine.reset()
+    want = engine.generate([SAMPLED_REQS[0], REQS[1]])
+    engine.reset()
+    s0 = engine.stream(SAMPLED_REQS[0])
+    s1 = engine.stream(REQS[1])
+    got0, got1 = [], []
+    it0, it1 = iter(s0), iter(s1)     # alternate: emission order preserved
+    for sink, it in ((got0, it0), (got1, it1)) * 10:
+        try:
+            sink.append(next(it))
+        except StopIteration:
+            pass
+    assert [got0, got1] == want
+
+
+def test_finished_streams_are_popped():
+    """Ownership transfer: once the final token is buffered the engine
+    drops its consumer reference AND retains no token copy — completed
+    streams cost the engine nothing (bounded memory)."""
+    engine = engine_for("dense")
+    engine.reset()
+    ts = engine.stream(Request(prompt=[1, 2], max_new_tokens=4,
+                               temperature=1.0, seed=5))
+    toks = list(ts)
+    assert len(toks) == 4 and ts.finished
+    assert ts.rid not in engine._consumers
+    assert not engine._results and not engine._work
+    # exhausted stream stays exhausted (no engine interaction)
+    with pytest.raises(StopIteration):
+        next(iter(ts))
+
+
+def test_stream_survives_foreign_generate_drain():
+    """A stream submitted before someone else's generate() keeps its
+    tokens: the drain finishes the streamed request but delivers to the
+    stream's buffer, never to generate()'s collected results."""
+    engine = engine_for("dense")
+    engine.reset()
+    want = engine.generate([SAMPLED_REQS[3]])[0]
+    engine.reset()
+    ts = engine.stream(SAMPLED_REQS[3])
+    out = engine.generate([Request(prompt=[6, 7], max_new_tokens=2)])
+    assert len(out) == 1 and len(out[0]) == 2
+    assert ts.finished                 # drained by the foreign generate...
+    assert list(ts) == want            # ...into the stream's own buffer
+
+
+def test_stream_drives_engine_and_stashes_foreign_results():
+    """__next__ drives engine.step() when the buffer is empty; buffered
+    requests finished by those ticks stay retrievable via result()."""
+    engine = engine_for("dense")
+    engine.reset()
+    ts = engine.stream(Request(prompt=[1, 2, 3], max_new_tokens=6,
+                               temperature=0.9, seed=9))
+    rid = engine.submit(Request(prompt=[5, 6], max_new_tokens=3))
+    toks = list(ts)                    # drives the engine to completion
+    assert len(toks) == 6
+    foreign = engine.result(rid)       # stashed while the stream drove
+    assert len(foreign) == 3
+    with pytest.raises(KeyError):      # handed out exactly once
+        engine.result(rid)
+
+
+def test_on_token_callback_delivery():
+    """submit(on_token=...) pushes every token with a done flag on the
+    last; callback rids never appear in step()'s finished dict and leave
+    no engine-side buffer behind."""
+    engine = engine_for("dense")
+    engine.reset()
+    want = engine.generate([SAMPLED_REQS[1]])[0]
+    engine.reset()
+    seen = []
+    engine.submit(SAMPLED_REQS[1],
+                  on_token=lambda t, done: seen.append((t, done)))
+    while engine.pending():
+        assert engine.step() == {}     # ownership went to the callback
+    assert [t for t, _ in seen] == want
+    assert [done for _, done in seen] == \
+        [False] * (len(want) - 1) + [True]
+    assert not engine._consumers and not engine._results
 
 
 @settings(max_examples=10, deadline=None)
