@@ -73,8 +73,16 @@ HISTORY_SCHEMA: dict[str, type | tuple[type, ...]] = {
 # the columns two same-sha runs must reproduce byte-identically (wall_s and
 # ts are informational and excluded).  tokens_crc32 — the fingerprint of the
 # decoded streams, seeded-sampling determinism included — is deterministic
-# but optional in the schema: rows predating it stay valid.
-DETERMINISTIC_KEYS = tuple(HISTORY_SCHEMA) + ("tokens_crc32",)
+# but optional in the schema: rows predating it stay valid.  Likewise the
+# KV axis columns (kv_mode / max_concurrent_slots / kv_cache_bytes): shape-
+# derived and step-counted, deterministic, but absent from pre-paged rows.
+DETERMINISTIC_KEYS = tuple(HISTORY_SCHEMA) + (
+    "tokens_crc32", "kv_mode", "max_concurrent_slots", "kv_cache_bytes")
+
+#: the rung/trace names bench_kv_capacity appends — the paged-KV capacity
+#: A/B rows the acceptance bar below reasons about
+KV_CAP_RUNG = "kvcap"
+KV_CAP_TRACES = ("burst-mono", "burst-paged")
 
 
 def validate_history_row(row: dict) -> list[str]:
@@ -143,6 +151,62 @@ def check_history(path: pathlib.Path, tol: float = 0.25) -> list[str]:
                 f"{path.name}: REGRESSION {rung}/{trace}: tok_per_step "
                 f"{cur['tok_per_step']} @ {cur['sha']} is more than "
                 f"{tol:.0%} below {prev['tok_per_step']} @ {prev['sha']}")
+    errs.extend(f"{path.name}: {e}" for e in kv_capacity_bar(rows))
+    return errs
+
+
+def kv_capacity_bar(rows: list[dict]) -> list[str]:
+    """The paged-KV acceptance bar over the newest sha's kvcap A/B rows:
+    the paged int8 engine must reach STRICTLY more concurrent slots than
+    the monolithic engine while holding <= its cache bytes and <= its peak
+    live-buffer bytes — all three read from Engine.stats() columns.  Rows
+    predating the paged cache have no kvcap rung; the bar is then vacuous
+    (old histories stay valid)."""
+    mono_t, paged_t = KV_CAP_TRACES
+    last: dict[str, dict] = {}              # trace -> newest-sha last row
+    newest_sha = None
+    for row in rows:
+        if row.get("rung") == KV_CAP_RUNG:
+            newest_sha = row["sha"]         # append order: last sha wins
+    if newest_sha is None:
+        return []
+    for row in rows:
+        if row.get("rung") == KV_CAP_RUNG and row["sha"] == newest_sha:
+            last[row["trace"]] = row
+    errs = []
+    if set(last) != set(KV_CAP_TRACES):
+        return [f"kvcap @ {newest_sha}: need traces {KV_CAP_TRACES}, "
+                f"have {sorted(last)}"]
+    mono, paged = last[mono_t], last[paged_t]
+    for key in ("max_concurrent_slots", "kv_cache_bytes"):
+        for r in (mono, paged):
+            if not isinstance(r.get(key), int):
+                errs.append(f"kvcap @ {newest_sha}: row {r['trace']!r} "
+                            f"missing int key {key!r}")
+    if errs:
+        return errs
+    if paged["max_concurrent_slots"] <= mono["max_concurrent_slots"]:
+        errs.append(
+            f"kvcap @ {newest_sha}: paged max_concurrent_slots "
+            f"{paged['max_concurrent_slots']} must be STRICTLY above "
+            f"monolithic {mono['max_concurrent_slots']}")
+    if paged["kv_cache_bytes"] > mono["kv_cache_bytes"]:
+        errs.append(
+            f"kvcap @ {newest_sha}: paged kv_cache_bytes "
+            f"{paged['kv_cache_bytes']} exceeds monolithic "
+            f"{mono['kv_cache_bytes']} — the int8 paged pool must fit in "
+            f"the bf16 monolithic budget")
+    # peak-bytes bar: the engine-reported high-watermark per concurrent
+    # slot must strictly drop (absolute peak includes one batch-1 prefill
+    # scratch buffer PER slot, which scales with the slot count by design —
+    # the per-slot normalization is what int8 paging actually buys)
+    if (paged["peak_live_buffer_bytes"] * mono["max_concurrent_slots"]
+            >= mono["peak_live_buffer_bytes"] * paged["max_concurrent_slots"]):
+        errs.append(
+            f"kvcap @ {newest_sha}: paged peak_live_buffer_bytes/slot "
+            f"{paged['peak_live_buffer_bytes']}/{paged['max_concurrent_slots']}"
+            f" is not strictly below monolithic "
+            f"{mono['peak_live_buffer_bytes']}/{mono['max_concurrent_slots']}")
     return errs
 
 

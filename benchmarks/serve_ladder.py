@@ -197,12 +197,117 @@ def bench_rung(rung: Rung, trace_kind: str, *, cfg=None, params=None,
         "queue_depth_max": max(qdepth),
         "queue_depth_mean": round(sum(qdepth) / len(qdepth), 2),
         "peak_live_buffer_bytes": stats["peak_live_bytes"],
+        # the KV axis: layout mode, the slot-concurrency high-watermark and
+        # the cache footprint at serve precision, all from Engine.stats()
+        "kv_mode": engine.scfg.kv_mode,
+        "max_concurrent_slots": stats["peak_slots_active"],
+        "kv_cache_bytes": stats["slot_cache_bytes"],
         # informational, machine-dependent — excluded from determinism and
         # regression comparisons (check_results.DETERMINISTIC_KEYS)
         "wall_s": round(wall, 3),
         "ts": datetime.datetime.now(datetime.timezone.utc)  # qft: noqa[QFT005] sanctioned ts metadata column
                                .strftime("%Y-%m-%dT%H:%M:%SZ"),
     }
+
+
+#: the KV-capacity A/B: same burst workload, equal-or-less cache memory,
+#: strictly more concurrent slots on the paged int8 side (the PR 10 bar,
+#: gated by check_results.check_history)
+KV_CAP = dict(mono_slots=4, paged_slots=8, max_len=64, prefill_chunk=8,
+              page_size=16, n_requests=16, prompt_len=5, gen=10)
+
+
+def bench_kv_capacity(*, cfg=None, params=None, sha: str | None = None) \
+        -> list[dict]:
+    """Two history rows proving the paged int8 cache's capacity win.
+
+    The same 16-request burst (all arrivals at tick 0) is served twice:
+
+    - ``kvcap/burst-mono``:  monolithic activation-dtype cache, 4 slots —
+      the pre-PR-10 engine.
+    - ``kvcap/burst-paged``: paged int8 cache, 8 slots, with ``kv_pages``
+      pinned to the SAME token capacity the monolithic run preallocates
+      (mono_slots x max_len), so the comparison is capacity-equal and the
+      byte comparison is int8-vs-bf16 honest.
+
+    The acceptance bar (check_results): the paged row must reach strictly
+    more ``max_concurrent_slots`` at <= the monolithic ``kv_cache_bytes``
+    and <= its ``peak_live_buffer_bytes`` — both read from
+    ``Engine.stats()``, never recomputed by hand here.
+    """
+    import numpy as np
+    from repro.core import permissive
+    from repro.serve.engine import Engine, Request, ServeConfig
+
+    if cfg is None or params is None:
+        cfg, params = _bench_model()
+    sha = sha if sha is not None else git_sha()
+    kc = KV_CAP
+    seed = zlib.crc32(b"kvcap/burst") % (2 ** 31)
+    tok_rng = np.random.RandomState(seed)
+    prompts = [[int(t) for t in tok_rng.randint(1, cfg.vocab,
+                                                kc["prompt_len"])]
+               for _ in range(kc["n_requests"])]
+    rows = []
+    for trace_name, scfg in (
+        ("burst-mono", ServeConfig(
+            max_slots=kc["mono_slots"], max_len=kc["max_len"],
+            prefill_chunk=kc["prefill_chunk"], kv_mode="monolithic")),
+        ("burst-paged", ServeConfig(
+            max_slots=kc["paged_slots"], max_len=kc["max_len"],
+            prefill_chunk=kc["prefill_chunk"], kv_mode="paged",
+            kv_page_size=kc["page_size"],
+            kv_pages=kc["mono_slots"] * kc["max_len"] // kc["page_size"])),
+    ):
+        engine = Engine(cfg, permissive(), params, scfg)
+        reqs = [Request(prompt=p, max_new_tokens=kc["gen"])
+                for p in prompts]
+        t0 = time.time()  # qft: noqa[QFT005] sanctioned wall_s column
+        rmap = {engine.submit(r): i for i, r in enumerate(reqs)}
+        tick = 0
+        done_at: dict[int, int] = {}
+        streams: dict[int, list[int]] = {}
+        qdepth: list[int] = []
+        while engine.pending():
+            qdepth.append(engine.stats()["queue_depth"])
+            for rid, toks in engine.step().items():
+                done_at[rmap[rid]] = tick
+                streams[rmap[rid]] = toks
+            tick += 1
+        wall = time.time() - t0  # qft: noqa[QFT005] sanctioned wall_s column
+        stats = engine.stats()
+        lat = sorted(done_at[i] for i in range(len(reqs)))  # arrivals at 0
+        tokens = sum(len(streams[i]) for i in range(len(reqs)))
+        crc = zlib.crc32(json.dumps([streams[i] for i in
+                                     range(len(reqs))]).encode()) % (2 ** 31)
+        rows.append({
+            "schema": SCHEMA_VERSION,
+            "sha": sha,
+            "rung": "kvcap",
+            "trace": trace_name,
+            "mode": f"kv-{scfg.kv_mode}",
+            "tokens_crc32": crc,
+            "max_slots": scfg.max_slots,
+            "max_len": scfg.max_len,
+            "prefill_chunk": scfg.prefill_chunk,
+            "n_requests": kc["n_requests"],
+            "steps": tick,
+            "tokens": tokens,
+            "tok_per_step": round(tokens / tick, 4),
+            "p50_latency_steps": percentile_steps(lat, 0.50),
+            "p95_latency_steps": percentile_steps(lat, 0.95),
+            "p99_latency_steps": percentile_steps(lat, 0.99),
+            "queue_depth_max": max(qdepth),
+            "queue_depth_mean": round(sum(qdepth) / len(qdepth), 2),
+            "peak_live_buffer_bytes": stats["peak_live_bytes"],
+            "kv_mode": scfg.kv_mode,
+            "max_concurrent_slots": stats["peak_slots_active"],
+            "kv_cache_bytes": stats["slot_cache_bytes"],
+            "wall_s": round(wall, 3),
+            "ts": datetime.datetime.now(datetime.timezone.utc)  # qft: noqa[QFT005] sanctioned ts metadata column
+                                   .strftime("%Y-%m-%dT%H:%M:%SZ"),
+        })
+    return rows
 
 
 def append_history(rows: list[dict],
@@ -233,6 +338,9 @@ def run(smoke: bool = False, rungs: tuple[Rung, ...] | None = None,
     if "poisson" in traces:
         rows += [bench_rung(rung, "poisson", cfg=cfg, params=params,
                             sha=sha, sampled=True) for rung in rungs]
+    # the KV-capacity A/B rides every run, smoke included — it IS the
+    # PR 10 acceptance bar (more concurrent slots at <= equal memory)
+    rows += bench_kv_capacity(cfg=cfg, params=params, sha=sha)
     if append:
         append_history(rows, history)
     return rows

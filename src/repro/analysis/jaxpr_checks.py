@@ -23,18 +23,37 @@ int8dot          On the serve path the integer weight operand enters
                  Pallas int4 kernel's inner jaxpr).  The acknowledged
                  odd-shape ``ref.quant_matmul_ref`` fallback is reported as
                  a skip, never silently passed.
-prefill-recompile  The chunked exact-length prefill compiles one program
-                 per distinct chunk length; the surface is
-                 ``min(prefill_chunk, max_len)`` distinct avals.  Reported
-                 per config and gated against a budget (the ROADMAP
-                 "recompile storm" item, made measurable).
+prefill-recompile  Attention families bucket prompt chunks to a fixed
+                 pad-and-mask menu (serve/kv_cache.prefill_buckets), so the
+                 compiled-program surface is ``len(menu)`` — the budget is
+                 derived from the exact menu the engine uses and anything
+                 above it is an error.  SSM families keep exact-length
+                 chunks (a recurrence consumes every frame it sees) and
+                 report the documented ``min(prefill_chunk, max_len)``
+                 fallback surface as info.
 plan-coverage    Every quantized site in the init tree resolves through the
                  QuantPlan path table — a missing path means
                  ``bits_for`` silently falls back to ``default_bits``
                  (the role-ladder fallback this repo spent PR 3/4 removing).
+                 The serve-time KV cache is a covered tensor class: a
+                 standard-KV family whose plan lacks the ``kv_cache`` entry
+                 fails (an f32-KV fallback would otherwise be silent).
 kernel-route     ``decode_route`` × ``_attn_layer_count`` predict whether
                  the decode jaxpr contains a ``pallas_call``; the traced
                  graph must agree in both routed and unrouted modes.
+kv-cache         The traced decode cache agrees with the plan's KV entry:
+                 int8 page pools + per-slot scale leaves + int32 page table
+                 when the plan says int8 KV.  The scales are plain cache
+                 leaves of the SAME decode step the one-transfer check
+                 traces, so they provably ride the single transfer.
+kv-fused         KV quant/dequant stays fused inside the decode jaxpr: no
+                 float tensor at page-pool footprint (a materialized
+                 dequantized cache), no ``mul`` applying scales at cache
+                 extent (scales must fold into q before the dot and into
+                 the context after it).
+kv-page-table    The decode jaxpr actually indexes through the page table:
+                 at least one int8 page gather and one int8 page scatter,
+                 with the int32 ``pt`` leaf riding the cache tree.
 train-step       ``make_train_step`` traces under the resolved plan with
                  zero callback surfaces (the distillation loop never syncs).
 """
@@ -47,7 +66,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs import registry
-from ..core.plan import iter_quantized
+from ..core.plan import KV_CACHE_FAMILIES, iter_quantized
 from ..models import init_cache
 from ..core.qconfig import QuantConfig
 from ..kernels.ops import pallas_tiles_ok, qlinear_deployed
@@ -55,6 +74,7 @@ from ..models.attention import decode_route
 from ..optim.adam import Adam
 from ..serve.deploy import abstract_deploy_surfaces, find_exported_linears
 from ..serve.engine import ServeConfig, _attn_layer_count, serve_trace_surfaces
+from ..serve.kv_cache import BUCKETED_PREFILL_FAMILIES, prefill_buckets
 from ..train.steps import abstract_train_state, make_train_step
 from .report import Diagnostic
 
@@ -244,30 +264,52 @@ def check_kernel_route(arch: str, cfg, scfg: ServeConfig, deployed,
 def check_prefill_recompile(arch: str, cfg, surfaces: dict,
                             budget: int | None = None) -> list[Diagnostic]:
     scfg = surfaces["scfg"]
-    count = min(scfg.prefill_chunk, scfg.max_len)
+    bucketed = cfg.family in BUCKETED_PREFILL_FAMILIES
+    if bucketed:
+        menu = prefill_buckets(scfg.prefill_chunk)
+        count = len(menu)
+        trace_lens = sorted({menu[0], menu[-1]})
+    else:
+        # SSM fallback: a recurrence consumes pad frames, so chunks stay
+        # exact-length — one program per distinct remainder (documented)
+        count = min(scfg.prefill_chunk, scfg.max_len)
+        trace_lens = sorted({scfg.prefill_chunk, 1})
     diags = []
-    # prove the scheme actually compiles at both the steady-state chunk
-    # length and a remainder length (distinct avals → distinct programs)
-    for L in sorted({scfg.prefill_chunk, 1}):
+    # prove the scheme actually compiles at the menu extremes (bucketed)
+    # or the steady-state chunk + a remainder length (exact-length)
+    for L in trace_lens:
         batch = {"tokens": jax.ShapeDtypeStruct((1, L), jnp.int32)}
         cache = jax.eval_shape(lambda: init_cache(cfg, 1, scfg.max_len))
-        closed = _trace(surfaces["prefill_fn"], surfaces["deployed"],
-                        cache, batch)
+        if bucketed:
+            closed = _trace(surfaces["prefill_bucketed_fn"],
+                            surfaces["deployed"], cache, batch,
+                            jax.ShapeDtypeStruct((), jnp.int32))
+        else:
+            closed = _trace(surfaces["prefill_fn"], surfaces["deployed"],
+                            cache, batch)
         cb = callback_count(closed)
         if cb:
             diags.append(Diagnostic(
                 check="trace.prefill-recompile", config=arch, value=cb,
                 message=f"prefill step (chunk len {L}) has {cb} callback "
                         "surface(s) — prefill must be sync-free"))
-    cap = budget if budget is not None else scfg.prefill_chunk
+    # the bucketed budget is the menu itself — any extra program is a bug;
+    # the exact-length fallback keeps the lenient documented cap
+    cap = budget if budget is not None else \
+        (count if bucketed else scfg.prefill_chunk)
     sev = "error" if count > cap else "info"
+    if bucketed:
+        msg = (f"prefill pads to a fixed {count}-bucket menu {menu} "
+               f"(prefill_chunk={scfg.prefill_chunk}; real_len is traced)")
+    else:
+        msg = (f"prefill compiles ≤ {count} distinct chunk-length "
+               f"programs (exact-length SSM fallback; "
+               f"prefill_chunk={scfg.prefill_chunk}, "
+               f"max_len={scfg.max_len})")
     diags.append(Diagnostic(
         check="trace.prefill-recompile", config=arch, severity=sev,
         value=count,
-        message=(f"prefill compiles ≤ {count} distinct chunk-length "
-                 f"programs (prefill_chunk={scfg.prefill_chunk}, "
-                 f"max_len={scfg.max_len})"
-                 + (f" — exceeds budget {cap}" if sev == "error" else ""))))
+        message=msg + (f" — exceeds budget {cap}" if sev == "error" else "")))
     return diags
 
 
@@ -283,6 +325,24 @@ def check_plan_coverage(arch: str, cfg, qcfg, plan) -> list[Diagnostic]:
     tree_paths = {".".join(p) for p, _kind, _n in iter_quantized(params)}
     plan_paths = set(qplan.paths)
     diags = []
+    # the KV cache is a serve-time tensor class, not an init-tree site —
+    # expected exactly for the standard-KV families (never "stale")
+    expects_kv = bool(getattr(qcfg, "kv_bits", 0)) \
+        and cfg.family in KV_CACHE_FAMILIES
+    has_kv = "kv_cache" in plan_paths
+    plan_paths.discard("kv_cache")
+    if expects_kv and not has_kv:
+        diags.append(Diagnostic(
+            check="trace.plan-coverage", config=arch, value="kv_cache",
+            message="standard-KV family with kv_bits set, but the resolved "
+                    "plan has no `kv_cache` entry — the serve cache would "
+                    "silently stay in the activation dtype"))
+    elif has_kv and not expects_kv:
+        diags.append(Diagnostic(
+            check="trace.plan-coverage", config=arch, severity="warning",
+            value="kv_cache",
+            message=f"plan entry `kv_cache` but family {cfg.family} has no "
+                    "standard slot-KV cache to quantize"))
     for missing in sorted(tree_paths - plan_paths):
         diags.append(Diagnostic(
             check="trace.plan-coverage", config=arch, value=missing,
@@ -300,7 +360,135 @@ def check_plan_coverage(arch: str, cfg, qcfg, plan) -> list[Diagnostic]:
             check="trace.plan-coverage", config=arch, severity="info",
             value=len(tree_paths),
             message=f"all {len(tree_paths)} quantized sites resolve "
-                    "through the plan path table"))
+                    "through the plan path table"
+                    + (" (+ kv_cache tensor class)" if has_kv else "")))
+    return diags
+
+
+#: the KV-cache rule family — skipped together for non-standard-KV configs
+_KV_CHECKS = ("trace.kv-cache", "trace.kv-fused", "trace.kv-page-table")
+
+
+def check_kv_cache(arch: str, cfg, surfaces: dict, plan) -> list[Diagnostic]:
+    """The three KV rules over ONE decode trace (the same step the
+    one-transfer check proves, so the scale leaves demonstrably ride the
+    single host transfer):
+
+    kv-cache      plan `kv_cache` entry ↔ traced cache layout agree (int8
+                  pools + f32 scale leaves + int32 page table iff the plan
+                  says 8-bit KV).
+    kv-fused      no float tensor at page-pool footprint ``(*, P, Hkv, hd)``
+                  (a materialized dequantized pool) and no ``mul`` at cache
+                  extent (scales fold into q pre-dot / context post-dot,
+                  never into the gathered KV) — witnessed non-vacuously by
+                  at least one int8 page gather.
+    kv-page-table the decode graph actually indexes pages: ≥1 int8 gather
+                  (the page read) and ≥1 int8 scatter (the token write).
+    """
+    if cfg.family not in KV_CACHE_FAMILIES:
+        return [Diagnostic(
+            check=c, config=arch, severity="skip",
+            message=f"{cfg.family} keeps the monolithic slot cache (no "
+                    "standard KV layout to page/quantize)")
+            for c in _KV_CHECKS]
+    kv, cache = surfaces["kv"], surfaces["cache"]
+    qplan = plan.quant_plan
+    entry = qplan.get("kv_cache") if qplan is not None else None
+    paged = (kv is not None
+             and getattr(cache.get("k"), "dtype", None) == jnp.int8
+             and {"k_scale", "v_scale", "pt"} <= set(cache))
+    wants_int8 = entry is not None and entry.w_bits == 8
+    if wants_int8 != paged:
+        return [Diagnostic(
+            check="trace.kv-cache", config=arch,
+            value={"plan_kv_bits": None if entry is None else entry.w_bits,
+                   "cache_paged_int8": paged},
+            message="plan and traced cache disagree: plan says "
+                    f"{'int8' if wants_int8 else 'no'} KV quantization but "
+                    f"the decode cache is "
+                    f"{'paged int8' if paged else 'monolithic float'} — "
+                    "a silent precision fallback")] + [
+            Diagnostic(check=c, config=arch, severity="skip",
+                       message="skipped: kv-cache plan/trace mismatch")
+            for c in _KV_CHECKS[1:]]
+    if not paged:
+        return [Diagnostic(
+            check=c, config=arch, severity="skip",
+            message="KV quantization disabled (kv_bits=0 or monolithic "
+                    "mode) — plan and cache agree")
+            for c in _KV_CHECKS]
+    diags = [Diagnostic(
+        check="trace.kv-cache", config=arch, severity="info",
+        value={"kv_bits": entry.w_bits, "page_size": kv.page_size,
+               "n_pages": kv.n_pages},
+        message="plan kv_cache entry matches traced cache: int8 page pools"
+                " + per-slot scales + int32 page table, all leaves of the "
+                "one-transfer decode step")]
+    closed = _trace(surfaces["decode_fn"], surfaces["deployed"], cache,
+                    surfaces["state"])
+    P = kv.page_size
+    Hkv, hd = int(cache["k"].shape[-2]), int(cache["k"].shape[-1])
+    fused_viol: list[str] = []
+    int8_gathers = int8_scatters = 0
+    for eqn in iter_eqns(closed):
+        name = eqn.primitive.name
+        out_aval = getattr(eqn.outvars[0], "aval", None) if eqn.outvars \
+            else None
+        out_dt = getattr(out_aval, "dtype", None)
+        if name == "gather" and out_dt == jnp.int8 \
+                and getattr(out_aval, "ndim", 0) >= 4:
+            int8_gathers += 1
+        elif name.startswith("scatter") and out_dt == jnp.int8:
+            int8_scatters += 1
+        for v in eqn.outvars:
+            aval = getattr(v, "aval", None)
+            dt = getattr(aval, "dtype", None)
+            if dt is None or not jnp.issubdtype(dt, jnp.floating):
+                continue
+            shp = tuple(aval.shape)
+            if len(shp) >= 4 and shp[-3:] == (P, Hkv, hd):
+                fused_viol.append(
+                    f"{name} produces float {shp} at page-pool footprint "
+                    "— a materialized dequantized KV pool")
+            elif (name == "mul" and len(shp) >= 4
+                  and shp[-2:] == (Hkv, hd) and shp[-3] >= P):
+                fused_viol.append(
+                    f"mul produces float {shp} at cache extent — scales "
+                    "must fold into q (pre-dot) and context (post-dot), "
+                    "never into the gathered KV")
+    if fused_viol:
+        diags.extend(Diagnostic(check="trace.kv-fused", config=arch,
+                                value=m.split(" ")[0], message=m)
+                     for m in fused_viol[:4])
+    elif int8_gathers == 0:
+        diags.append(Diagnostic(
+            check="trace.kv-fused", config=arch, value=0,
+            message="no int8 page gather in the decode jaxpr — the fused "
+                    "quant/dequant check would be vacuous"))
+    else:
+        diags.append(Diagnostic(
+            check="trace.kv-fused", config=arch, severity="info",
+            value=int8_gathers,
+            message="KV dequant stays fused: int8 feeds the attention "
+                    "dots via bare converts, scales hoisted out of the "
+                    "cache extent"))
+    pt_ok = getattr(cache.get("pt"), "dtype", None) == jnp.int32
+    if int8_gathers >= 1 and int8_scatters >= 1 and pt_ok:
+        diags.append(Diagnostic(
+            check="trace.kv-page-table", config=arch, severity="info",
+            value={"gathers": int8_gathers, "scatters": int8_scatters},
+            message="decode indexes through the page table: "
+                    f"{int8_gathers} int8 page gather(s), "
+                    f"{int8_scatters} int8 token scatter(s)"))
+    else:
+        diags.append(Diagnostic(
+            check="trace.kv-page-table", config=arch,
+            value={"gathers": int8_gathers, "scatters": int8_scatters,
+                   "pt_int32": pt_ok},
+            message="paged decode must gather int8 pages, scatter the new "
+                    "token int8, and carry an int32 page table — traced "
+                    f"graph has gathers={int8_gathers}, "
+                    f"scatters={int8_scatters}, pt_int32={pt_ok}"))
     return diags
 
 
@@ -426,7 +614,7 @@ def _small_train_batch(cfg, B: int = 2, S: int = 32) -> dict:
 #: checks that need a serving path; encdec has none (forward needs frames;
 #: the Engine builds token-only batches — see ROADMAP)
 _SERVE_CHECKS = ("trace.one-transfer", "trace.kernel-route",
-                 "trace.prefill-recompile")
+                 "trace.prefill-recompile") + _KV_CHECKS
 
 
 def analyze_config(arch: str, qcfg: QuantConfig | None = None,
@@ -464,6 +652,7 @@ def analyze_config(arch: str, qcfg: QuantConfig | None = None,
     diags.extend(check_kernel_route(arch, cfg, scfg, deployed, plan))
     diags.extend(check_prefill_recompile(arch, cfg, surfaces,
                                          budget=prefill_budget))
+    diags.extend(check_kv_cache(arch, cfg, surfaces, plan))
     return diags
 
 

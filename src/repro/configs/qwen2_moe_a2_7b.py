@@ -11,7 +11,11 @@ CONFIG = ModelConfig(
     rope_theta=1e6,
     moe=MoEConfig(n_experts=60, top_k=4, n_shared=4, d_ff_expert=1408))
 
+# padded fields reset to 0 so __post_init__ re-derives them at SMOKE
+# scale (dataclasses.replace would otherwise inherit the full-size
+# vocab/head padding -- a 150k-row embedding under a 512 vocab)
 SMOKE = dataclasses.replace(
     CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, vocab=512,
     head_dim=16, moe=MoEConfig(n_experts=6, top_k=2, n_shared=2,
-                               d_ff_expert=32))
+                               d_ff_expert=32),
+    n_heads_padded=0, n_kv_heads_padded=0, vocab_padded=0)

@@ -11,6 +11,10 @@ CONFIG = ModelConfig(
     n_kv_heads=4, d_ff=18944, vocab=152064, head_dim=128,
     mrope_sections=(16, 24, 24), rope_theta=1e6, bias=True)
 
+# padded fields reset to 0 so __post_init__ re-derives them at SMOKE
+# scale (dataclasses.replace would otherwise inherit the full-size
+# vocab/head padding -- a 150k-row embedding under a 512 vocab)
 SMOKE = dataclasses.replace(
     CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
-    vocab=512, head_dim=16, mrope_sections=(4, 2, 2))
+    vocab=512, head_dim=16, mrope_sections=(4, 2, 2),
+    n_heads_padded=0, n_kv_heads_padded=0, vocab_padded=0)

@@ -13,6 +13,10 @@ CONFIG = ModelConfig(
     d_model=1024, n_heads=16, n_kv_heads=16, d_ff=4096, vocab=256206,
     head_dim=64, mlp="gelu", rope_theta=1e4)
 
+# padded fields reset to 0 so __post_init__ re-derives them at SMOKE
+# scale (dataclasses.replace would otherwise inherit the full-size
+# vocab/head padding -- a 150k-row embedding under a 512 vocab)
 SMOKE = dataclasses.replace(
     CONFIG, n_layers=2, enc_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
-    d_ff=128, vocab=512, head_dim=16)
+    d_ff=128, vocab=512, head_dim=16,
+    n_heads_padded=0, n_kv_heads_padded=0, vocab_padded=0)

@@ -97,7 +97,7 @@ class TensorSpec:
     layout: str                        # effective QLayout str ("group:32", …)
     stream: str | None                 # S_wL-supplying stream name (Eq. 2)
     packed: bool                       # int4 nibble-packed in the artifact
-    role: str                          # linear | conv | head | router | embed
+    role: str                          # linear | conv | head | router | embed | kv
     shape: tuple[int, ...] = ()        # full param shape (incl. stacked axes)
     exempt: bool = False               # selected by the §4 1%-rule
     origin: str = "default"            # producer that decided the bits
@@ -514,6 +514,14 @@ def make_sensitivity_producer(scores: dict[str, float], sensitive_bits: int,
 # Resolution entry point
 # ---------------------------------------------------------------------------
 
+#: families whose serve cache is the standard ``{"k","v","pos"}`` slot-KV
+#: layout — the ones that get a ``kv_cache`` plan entry (and the paged int8
+#: cache at serve time).  ssm has no length-indexed cache, hybrid nests its
+#: attention cache, mla_moe caches compressed latents, encdec has no
+#: serving path.
+KV_CACHE_FAMILIES = ("dense", "moe", "vlm")
+
+
 def resolve_plan(qcfg: QuantConfig, params, model_cfg=None,
                  producers: tuple = ()) -> QuantPlan:
     """(QuantConfig, student params tree) → QuantPlan, via the producer chain.
@@ -548,6 +556,17 @@ def resolve_plan(qcfg: QuantConfig, params, model_cfg=None,
             f"group layout does not divide d_in for {len(live)} "
             f"tensor(s); fell back to a single group ({detail})",
             UserWarning, stacklevel=2)
+    # the serve-time KV stream is a tensor class like any other: families
+    # with the standard slot-KV cache get a plan entry so a serving stack
+    # that silently keeps the cache in f32 fails trace.plan-coverage.  The
+    # "slot-head" layout names the scale granularity (per-slot × per-kv-head,
+    # MMSE-fitted at slot install); shape is serve-time (depends on
+    # max_slots), so it stays ().
+    if (getattr(qcfg, "kv_bits", 0) and model_cfg is not None
+            and getattr(model_cfg, "family", None) in KV_CACHE_FAMILIES):
+        specs["kv_cache"] = TensorSpec(
+            w_bits=qcfg.kv_bits, layout="slot-head", stream=None,
+            packed=False, role="kv", origin="kv-cache")
     return QuantPlan(entries=tuple(specs.items()),
                      default_bits=qcfg.w_bits,
                      default_layout=str(qcfg.layout))

@@ -114,6 +114,10 @@ class QuantConfig:
     exempt_frac: float = 0.01         # cumulative weight-bytes fraction kept at
                                       # exempt_bits (paper's flat 1% rule, §4)
     embed_bits: int = 8               # embedding / LM-head precision
+    kv_bits: int = 8                  # serve-time KV-cache precision (the KV
+                                      # stream is a plan entry like any other
+                                      # tensor class; 0 → keep cache in the
+                                      # activation dtype, no plan entry)
     act_signed: bool = False          # paper: unsigned 8b activations
     mmse_iters: int = 10              # PPQ/APQ iterations at init
 

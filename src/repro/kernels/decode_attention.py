@@ -19,6 +19,15 @@ Lengths must be >= 1 (the engine guarantees this: a decode step always
 writes the current token at ``pos`` before attending, so the valid prefix
 is ``pos + 1``); block 0 is therefore always live and l never ends at 0.
 
+**Quantized KV** (the paged int8 cache): pass per-slot per-kv-head
+``k_scale``/``v_scale`` ``[S, Hkv]`` and int8 ``k``/``v``.  Dequantization
+is fused into the existing flash math at no extra bandwidth: the K scale is
+a scalar per (slot, head) program, so it folds into the [G, hd] query
+before the QK^T dot (exactly where the softmax 1/sqrt(hd) already lives),
+and the V scale multiplies the [G, hd] accumulator once at output — the
+int8 blocks feed both dots through the same ``astype(f32)`` the bf16 path
+uses.  No dequantized cache copy exists at any block size.
+
 Decode is memory-bound (every step re-reads the whole live KV), so skipped
 blocks translate ~linearly into decode latency on real hardware; in
 interpret mode (CPU tests) the win shows up as deterministic work units in
@@ -48,17 +57,24 @@ def decode_tiles_ok(max_len: int, bk: int = 128) -> bool:
     return max_len % bk == 0
 
 
-def _fd_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-               bk: int, n_k: int, scale: float):
+def _fd_kernel(len_ref, q_ref, k_ref, v_ref, *rest, bk: int, n_k: int,
+               scale: float, quantized: bool):
     """One (slot, kv_head, kv_block) grid step.
 
     len_ref: [1, 1]        int32 valid-prefix length of this slot (>= 1)
     q_ref:   [1, 1, G, hd] the slot's query group for this KV head
     k_ref:   [1, bk, 1, hd]
     v_ref:   [1, bk, 1, hd]
+    quantized → two extra [1, 1] f32 refs lead ``rest``: this (slot, head)'s
+    K and V dequant scales.
     o_ref:   [1, 1, G, hd]
     m/l/acc: [G, 1] / [G, 1] / [G, hd] f32 VMEM online-softmax state
     """
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        ks_ref = vs_ref = None
+        o_ref, m_ref, l_ref, acc_ref = rest
     j = pl.program_id(2)
 
     @pl.when(j == 0)
@@ -70,7 +86,8 @@ def _fd_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     length = len_ref[0, 0]
 
     def _block():
-        q = q_ref[0, 0].astype(jnp.float32) * scale       # [G, hd]
+        qscale = scale if not quantized else scale * ks_ref[0, 0]
+        q = q_ref[0, 0].astype(jnp.float32) * qscale      # [G, hd]
         k = k_ref[0, :, 0].astype(jnp.float32)            # [bk, hd]
         v = v_ref[0, :, 0].astype(jnp.float32)            # [bk, hd]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
@@ -94,45 +111,60 @@ def _fd_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
     @pl.when(j == n_k - 1)
     def _out():
-        o_ref[0, 0] = (acc_ref[...] /
-                       jnp.maximum(l_ref[...], 1e-20)).astype(o_ref.dtype)
+        acc = acc_ref[...] / jnp.maximum(l_ref[...], 1e-20)
+        if quantized:
+            acc = acc * vs_ref[0, 0]
+        o_ref[0, 0] = acc.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("bk", "interpret"))
 def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
-                     lengths: jax.Array, bk: int = 128,
+                     lengths: jax.Array, k_scale: jax.Array | None = None,
+                     v_scale: jax.Array | None = None, bk: int = 128,
                      interpret: bool | None = None) -> jax.Array:
     """Slot-masked flash-decode.
 
     q: [S, Hkv, G, hd] — one query token per slot, grouped kv-head-major
        (head h == kv*G + g, exactly `_sdpa`'s GQA grouping);
-    k, v: [S, T, Hkv, hd] — the slot-indexed KV cache (T == max_len);
-    lengths: [S] int32 — per-slot valid prefix (pos + 1, always >= 1)
+    k, v: [S, T, Hkv, hd] — the slot-indexed KV cache (T == max_len), bf16
+       or — with scales — int8;
+    lengths: [S] int32 — per-slot valid prefix (pos + 1, always >= 1);
+    k_scale, v_scale: optional [S, Hkv] f32 — per-slot per-kv-head dequant
+       scales for an int8 cache (both or neither)
     → [S, Hkv, G, hd].
 
     ``decode_tiles_ok(T, bk)`` must hold; interpret=None auto-selects by
     backend (models/attention.py gates the call and falls back to the
-    masked-XLA `_sdpa` otherwise).
+    masked-XLA `_sdpa` / `_paged_sdpa` path otherwise).
     """
     S, Hkv, G, hd = q.shape
     T = k.shape[1]
     bk = min(bk, T)
     assert T % bk == 0, (T, bk)
+    quantized = k_scale is not None
+    assert (k_scale is None) == (v_scale is None)
     n_k = T // bk
     grid = (S, Hkv, n_k)
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda s, h, j: (s, 0)),
+        pl.BlockSpec((1, 1, G, hd), lambda s, h, j: (s, h, 0, 0)),
+        pl.BlockSpec((1, bk, 1, hd), lambda s, h, j: (s, j, h, 0)),
+        pl.BlockSpec((1, bk, 1, hd), lambda s, h, j: (s, j, h, 0)),
+    ]
+    operands = [lengths.astype(jnp.int32)[:, None], q, k, v]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, 1), lambda s, h, j: (s, h)),
+                     pl.BlockSpec((1, 1), lambda s, h, j: (s, h))]
+        operands += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
     return pl.pallas_call(
-        functools.partial(_fd_kernel, bk=bk, n_k=n_k, scale=hd ** -0.5),
+        functools.partial(_fd_kernel, bk=bk, n_k=n_k, scale=hd ** -0.5,
+                          quantized=quantized),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda s, h, j: (s, 0)),
-            pl.BlockSpec((1, 1, G, hd), lambda s, h, j: (s, h, 0, 0)),
-            pl.BlockSpec((1, bk, 1, hd), lambda s, h, j: (s, j, h, 0)),
-            pl.BlockSpec((1, bk, 1, hd), lambda s, h, j: (s, j, h, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, G, hd), lambda s, h, j: (s, h, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((S, Hkv, G, hd), q.dtype),
         scratch_shapes=[pltpu.VMEM((G, 1), jnp.float32),
                         pltpu.VMEM((G, 1), jnp.float32),
                         pltpu.VMEM((G, hd), jnp.float32)],
         interpret=interpret if interpret is not None else default_interpret(),
-    )(lengths.astype(jnp.int32)[:, None], q, k, v)
+    )(*operands)

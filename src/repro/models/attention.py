@@ -15,6 +15,7 @@ from ..core import dof
 from ..core.plan import plan_view
 from ..core.qconfig import QuantConfig
 from ..kernels.decode_attention import decode_attention, decode_tiles_ok
+from ..serve.kv_cache import quantize_kv
 from .config import ModelConfig
 from .layers import apply_mrope, apply_rope, rmsnorm, init_rmsnorm
 
@@ -106,6 +107,73 @@ def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool,
     return out.reshape(B, Sq, H, hd)
 
 
+def _paged_sdpa(q: jax.Array, k8: jax.Array, v8: jax.Array,
+                lengths: jax.Array, k_scale: jax.Array,
+                v_scale: jax.Array) -> jax.Array:
+    """Masked-XLA decode attention over gathered int8 KV pages.
+
+    q: [S,1,H,hd] float; k8/v8: [S,T,Hkv,hd] int8; lengths: [S];
+    k_scale/v_scale: [S,Hkv].  Dequantization is **fused by construction**:
+    the K scale (and the softmax 1/sqrt(hd)) folds into the tiny q operand
+    before the dot and the V scale multiplies the tiny [S,Hkv,G,hd] context
+    after it, so the int8 cache feeds each einsum through a bare convert —
+    no float tensor at cache extent is ever materialized.
+    """
+    S, _, H, hd = q.shape
+    T, Hkv = k8.shape[1], k8.shape[2]
+    G = H // Hkv
+    qg = q[:, 0].reshape(S, Hkv, G, hd)
+    qs = qg * (hd ** -0.5 * k_scale)[:, :, None, None]
+    logits = jnp.einsum("skgh,stkh->skgt", qs, k8.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+    mask = jnp.arange(T)[None, :] < lengths[:, None]             # [S,T]
+    logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("skgt,stkh->skgh", probs, v8.astype(jnp.float32))
+    ctx = ctx * v_scale[:, :, None, None]
+    return ctx.reshape(S, 1, H, hd)
+
+
+def _paged_decode(q: jax.Array, k: jax.Array, v: jax.Array, cache: Params,
+                  cfg: ModelConfig, use_pallas: bool,
+                  interpret: bool | None) -> tuple[jax.Array, Params]:
+    """One decode step over the paged int8 KV cache (serve, Sq == 1).
+
+    Cache leaves (per layer): ``k``/``v`` int8 page pools
+    ``[n_pages+1, P, Hkv, hd]`` (last page is the write-sink "trash" page),
+    ``k_scale``/``v_scale`` ``[S,Hkv]`` install-time MMSE scales, plus the
+    shared ``pt`` ``[S, max_pages]`` page table and ``pos`` ``[S]``.  The new
+    token is quantized with the slot's frozen scales and scattered into
+    (page, row); retired slots' pt rows all point at the trash page, so the
+    unconditional every-slot write never aliases a reused page.
+    """
+    pos, pt = cache["pos"], cache["pt"]
+    pool_k, pool_v = cache["k"], cache["v"]
+    ks, vs = cache["k_scale"], cache["v_scale"]
+    S, n_pg = pt.shape
+    P, Hkv, hd = pool_k.shape[1], pool_k.shape[2], pool_k.shape[3]
+    H = q.shape[2]
+    pg = pt[jnp.arange(S), jnp.minimum(pos // P, n_pg - 1)]
+    row = pos % P
+    pool_k = pool_k.at[pg, row].set(quantize_kv(k[:, 0], ks))
+    pool_v = pool_v.at[pg, row].set(quantize_kv(v[:, 0], vs))
+    # gather each slot's pages into a transient [S,T,Hkv,hd] int8 view; rows
+    # past the slot's length (incl. trash-page garbage) are masked at compute
+    k8 = pool_k[pt].reshape(S, n_pg * P, Hkv, hd)
+    v8 = pool_v[pt].reshape(S, n_pg * P, Hkv, hd)
+    lengths = pos + 1
+    if decode_route(cfg, n_pg * P, use_pallas):
+        qd = q[:, 0].reshape(S, Hkv, H // Hkv, hd)
+        od = decode_attention(qd, k8, v8, lengths, k_scale=ks, v_scale=vs,
+                              interpret=interpret)
+        out = od.reshape(S, 1, H, hd)
+    else:
+        out = _paged_sdpa(q, k8, v8, lengths, ks, vs)
+    new_cache = {"k": pool_k, "v": pool_v, "k_scale": ks, "v_scale": vs,
+                 "pt": pt, "pos": pos + 1}
+    return out, new_cache
+
+
 def attention(x: jax.Array, p: Params, cfg: ModelConfig,
               qcfg: QuantConfig | None, positions: jax.Array,
               cache: Params | None = None, taps: dict | None = None,
@@ -146,6 +214,11 @@ def attention(x: jax.Array, p: Params, cfg: ModelConfig,
     if cache is None:
         out = _sdpa(q, k, v, causal=True, q_offset=0)
         new_cache = None
+    elif "pt" in cache:
+        # paged int8 KV (serve decode: Sq == 1, per-slot vector pos)
+        out, new_cache = _paged_decode(q, k, v, cache, cfg, use_pallas,
+                                       interpret)
+        out = out.astype(x.dtype)
     else:
         pos = cache["pos"]
         if getattr(pos, "ndim", 0) == 1:

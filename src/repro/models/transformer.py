@@ -343,22 +343,30 @@ def forward(params: Params, cfg: ModelConfig, qcfg: QuantConfig | None,
 
     new_cache = None
     if fam in ("dense", "moe", "mla_moe", "vlm"):
-        ck = None if cache is None else {k: cache[k] for k in cache if k != "pos"}
+        # "pos" (and the paged-KV page table "pt") are shared across layers:
+        # excluded from the per-layer scan tree, re-injected into every
+        # layer's cache view, threaded through unchanged
+        ck = None if cache is None else {k: cache[k] for k in cache
+                                         if k not in ("pos", "pt")}
         pos = None if cache is None else cache["pos"]
+        pt = None if cache is None else cache.get("pt")
 
         def body(h, lp, cs, i):
-            c = None if cs is None else {**cs, "pos": pos}
+            c = None if cs is None else {
+                **cs, "pos": pos, **({} if pt is None else {"pt": pt})}
             h, nc = _attn_block(h, lp, cfg, qcfg, positions, c, taps,
                                 f"L{i}" if i is not None else "L",
                                 plan=pv.child("layers"),
                                 use_pallas=use_pallas, interpret=interpret)
             if nc is not None:
-                nc = {k: v for k, v in nc.items() if k != "pos"}
+                nc = {k: v for k, v in nc.items() if k not in ("pos", "pt")}
             return h, nc
 
         x, nk = _scan_layers(x, params["layers"], cfg, qcfg, positions, ck, body)
         if cache is not None:
-            new_cache = {**nk, "pos": cache["pos"] + (S if cache is not None else 0)}
+            new_cache = {**nk, "pos": cache["pos"] + S}
+            if pt is not None:
+                new_cache["pt"] = pt
 
     elif fam == "ssm":
         def body(h, lp, cs, i):

@@ -35,6 +35,7 @@ from ..core.plan import (PLAN_KEY, STREAM_KEYS, STREAM_OF,  # noqa: F401
                          plan_to_array, resolve_plan)
 from ..core.qconfig import QLayout, QuantConfig
 from ..models import init_cache
+from .kv_cache import PAGED_KV_FAMILIES as _PAGED_FAMILIES
 
 Params = dict[str, Any]
 
@@ -147,7 +148,7 @@ def _as_plan(plan_or_qcfg, params=None, artifact=None) -> DeployPlan:
 
 
 def init_slot_cache(cfg, max_slots: int, max_len: int,
-                    dtype=jnp.bfloat16) -> Params:
+                    dtype=jnp.bfloat16, kv: "KVSpec | None" = None) -> Params:
     """Preallocated slot-indexed serving cache for the continuous-batching
     engine: ``models.init_cache`` with every position leaf vectorized to a
     per-slot offset vector [max_slots].
@@ -158,7 +159,32 @@ def init_slot_cache(cfg, max_slots: int, max_len: int,
     (models/attention.py vector-pos path).  The cache shape is fixed at
     engine construction — admission scatters a freshly prefilled batch-1
     cache into one slot row; the decode step never reallocates.
+
+    ``kv`` (a ``serve.kv_cache.KVSpec``) switches the standard-KV families
+    to the **paged int8** layout: per-layer int8 page pools replacing the
+    monolithic k/v rows, the shared int32 page table ``pt`` (initialized to
+    the trash page), and per-layer per-slot per-kv-head MMSE scale leaves.
+    ``kv=None`` keeps the monolithic full-precision layout — the
+    conformance oracle and the layout for families paging doesn't cover.
     """
+    if kv is not None:
+        if cfg.family not in _PAGED_FAMILIES:
+            raise ValueError(f"paged KV cache is not defined for family "
+                             f"{cfg.family!r} (supported: {_PAGED_FAMILIES})")
+        L = cfg.n_layers
+        Hkv, hd = cfg.n_kv_heads_padded, cfg.head_dim
+        pool = (L, kv.n_pages + 1, kv.page_size, Hkv, hd)
+        return {
+            "k": jnp.zeros(pool, jnp.int8),
+            "v": jnp.zeros(pool, jnp.int8),
+            # scale of 1.0 until install fits the slot's MMSE scales —
+            # a live divide-by-zero can never happen on an empty slot
+            "k_scale": jnp.ones((L, max_slots, Hkv), jnp.float32),
+            "v_scale": jnp.ones((L, max_slots, Hkv), jnp.float32),
+            "pt": jnp.full((max_slots, kv.max_pages_per_slot),
+                           kv.trash_page, jnp.int32),
+            "pos": jnp.zeros((max_slots,), jnp.int32),
+        }
     cache = init_cache(cfg, max_slots, max_len, dtype)
 
     def fix(path, leaf):

@@ -2,13 +2,20 @@
 
 A :class:`Scheduler` owns an arrival-ordered request queue and a fixed pool
 of decode slots backed by one preallocated slot-indexed KV cache
-(``serve.deploy.init_slot_cache``, per-slot offsets).  Admission prefills a
-request ALONE (batch 1, chunked — long prompts spread across steps instead
-of stalling the decode batch) and scatters the finished cache into its slot
-row; a finished slot is refilled by the next queued request at the next
-step.  The decode step is ONE jitted shape-stable call over all slots (dead
-slots masked, see train/steps.make_slot_decode_step) with exactly one host
-transfer per step — PR 2's device-side-bookkeeping invariant.
+(``serve.deploy.init_slot_cache``).  For the standard-KV families the cache
+is **paged int8** by default (serve/kv_cache.py): fixed-size pages from a
+shared per-layer pool, a per-slot page table, per-slot/per-kv-head MMSE
+scales fitted at install — admission is gated by free *pages* (worst-case
+reservation, FIFO), so memory scales with actual context lengths, not
+``max_slots * max_len``.  ``ServeConfig(kv_mode="monolithic")`` keeps the
+full-precision monolithic layout (the conformance oracle).  Admission
+prefills a request ALONE (batch 1, chunked, chunk lengths bucketed to a
+fixed menu so compiled prefill traces are bounded) and scatters/quantizes
+the finished cache into its slot; a finished slot is refilled by the next
+queued request at the next step.  The decode step is ONE jitted
+shape-stable call over all slots (dead slots masked, see
+train/steps.make_slot_decode_step) with exactly one host transfer per
+step — PR 2's device-side-bookkeeping invariant.
 
 Because every request is prefilled alone and decode slots never interact,
 a request's output tokens are bit-identical whether it is served alone, in
@@ -38,15 +45,20 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from ..core.fakequant import quantize
+from ..core.mmse import ppq_scale
 from ..core.qconfig import QuantConfig
 from ..core.sampling import sample_token
 from ..models import init_cache
 from ..models.attention import decode_route
 from ..models.config import ModelConfig
-from ..train.steps import make_prefill_step, make_slot_decode_step
+from ..train.steps import (make_bucketed_prefill_step, make_prefill_step,
+                           make_slot_decode_step)
 from .deploy import (DeployPlan, deploy_view, export_for_layers,
                      init_slot_cache, init_slot_state, make_deploy_plan,
                      plan_from_artifact)
+from .kv_cache import (BUCKETED_PREFILL_FAMILIES, KVSpec, PageAllocator,
+                       bucket_for, resolve_kv_spec)
 
 
 @dataclasses.dataclass
@@ -70,6 +82,15 @@ class ServeConfig:
     max_slots: int = 8                # fixed decode slot pool
     max_len: int = 512                # per-slot KV capacity
     prefill_chunk: int = 128          # tokens prefilled per slot per step
+    #: "paged" — int8 paged KV for the standard-KV families (dense/moe/vlm;
+    #: others fall back to monolithic automatically); "monolithic" — the
+    #: full-precision [max_slots, max_len] preallocation (the conformance
+    #: oracle and the ladder's baseline).
+    kv_mode: str = "paged"
+    kv_page_size: int = 16            # tokens per KV page
+    #: page-pool size; 0 → capacity-equivalent auto
+    #: (max_slots * ceil(max_len / kv_page_size))
+    kv_pages: int = 0
     slots: dataclasses.InitVar[int | None] = None   # legacy alias
 
     def __post_init__(self, slots):
@@ -105,10 +126,20 @@ class Scheduler:
         self.queue.append(dataclasses.replace(req, rid=rid))
         return rid
 
-    def admit(self) -> list[tuple[int, Request]]:
-        """Pop queued requests into free slots: [(slot, request), ...]."""
+    def admit(self, can_admit: Callable[[Request], bool] | None = None
+              ) -> list[tuple[int, Request]]:
+        """Pop queued requests into free slots: [(slot, request), ...].
+
+        ``can_admit`` gates each admission on resources beyond the slot
+        itself (the paged engine's free-page check).  Admission stops at the
+        FIRST request the predicate rejects — strictly FIFO, so a large
+        request at the head waits for pages instead of being starved by
+        smaller requests jumping the queue behind it.
+        """
         out = []
         while self.free and self.queue:
+            if can_admit is not None and not can_admit(self.queue[0]):
+                break
             slot = self.free.pop()
             req = self.queue.popleft()
             self.running[slot] = req.rid
@@ -128,15 +159,35 @@ class Scheduler:
         return len(self.queue) + len(self.running)
 
 
+def _activate_state(state, slot, last_logits, budget, eos, temperature,
+                    top_k, top_p, seed):
+    """Activate ``slot`` in the decode state.  The request's PRNG chain is
+    rooted here: ``PRNGKey(seed)`` splits into the first draw (the prefill's
+    next-token sample — greedy argmax when ``temperature == 0``) and the
+    carry key the decode step advances, so a request's k-th token is a
+    function of its own (seed, k) only."""
+    draw, carry = jax.random.split(jax.random.PRNGKey(seed))
+    first = sample_token(last_logits, draw, temperature, top_k, top_p)
+    return {"cur": state["cur"].at[slot].set(first),
+            "done": state["done"].at[slot].set(False),
+            "counts": state["counts"].at[slot].set(0),
+            "budget": state["budget"].at[slot].set(budget),
+            "eos": state["eos"].at[slot].set(eos),
+            "key": state["key"].at[slot].set(carry),
+            "temp": state["temp"].at[slot].set(
+                jnp.asarray(temperature, jnp.float32)),
+            "top_k": state["top_k"].at[slot].set(
+                jnp.asarray(top_k, jnp.int32)),
+            "top_p": state["top_p"].at[slot].set(
+                jnp.asarray(top_p, jnp.float32))}
+
+
 def _install_step(cache, state, slot_cache, slot, last_logits, plen,
                   budget, eos, temperature, top_k, top_p, seed):
     """Scatter a finished batch-1 prefill into slot row ``slot`` of the big
-    cache and activate the slot.  The request's PRNG chain is rooted here:
-    ``PRNGKey(seed)`` splits into the first draw (the prefill's next-token
-    sample — greedy argmax when ``temperature == 0``) and the carry key the
-    decode step advances, so a request's k-th token is a function of its own
-    (seed, k) only.  The whole slot row is overwritten, so any garbage the
-    masked decode wrote into a dead slot is erased on admission."""
+    (monolithic) cache and activate the slot.  The whole slot row is
+    overwritten, so any garbage the masked decode wrote into a dead slot is
+    erased on admission."""
 
     def leaf(path, big, small):
         if getattr(path[-1], "key", None) == "pos":
@@ -151,24 +202,79 @@ def _install_step(cache, state, slot_cache, slot, last_logits, plen,
                                             start)
 
     cache = jax.tree_util.tree_map_with_path(leaf, cache, slot_cache)
-    draw, carry = jax.random.split(jax.random.PRNGKey(seed))
-    first = sample_token(last_logits, draw, temperature, top_k, top_p)
-    state = {"cur": state["cur"].at[slot].set(first),
-             "done": state["done"].at[slot].set(False),
-             "counts": state["counts"].at[slot].set(0),
-             "budget": state["budget"].at[slot].set(budget),
-             "eos": state["eos"].at[slot].set(eos),
-             "key": state["key"].at[slot].set(carry),
-             "temp": state["temp"].at[slot].set(
-                 jnp.asarray(temperature, jnp.float32)),
-             "top_k": state["top_k"].at[slot].set(
-                 jnp.asarray(top_k, jnp.int32)),
-             "top_p": state["top_p"].at[slot].set(
-                 jnp.asarray(top_p, jnp.float32))}
+    state = _activate_state(state, slot, last_logits, budget, eos,
+                            temperature, top_k, top_p, seed)
     return cache, state
 
 
 _INSTALL = jax.jit(_install_step, donate_argnums=(0, 1))
+
+
+def _paged_install_step(cache, state, slot_cache, slot, pages, last_logits,
+                        plen, budget, eos, temperature, top_k, top_p, seed,
+                        *, page_size, mmse_iters):
+    """Quantize a finished batch-1 prefill into the slot's reserved KV pages
+    and activate the slot — the KV tensor class's MMSE init.
+
+    Per layer and per kv-head, an int8 scale is PPQ-fitted (core/mmse, the
+    same alternating-projection MMSE every weight tensor gets at init) over
+    the slot's *true* prefill rows — rows past ``plen`` (bucketed-prefill
+    padding) are zeroed first, which is exactly neutral in the PPQ
+    projections (a zero row contributes zero to numerator and denominator).
+    The fitted scales are frozen for the slot's lifetime: decode-time tokens
+    are quantized on-line with the same scales inside the decode jaxpr, so
+    the scales ride the one-transfer step as plain cache leaves.
+
+    ``pages`` is the slot's page list padded to the FIXED page-table width
+    with the trash page — one compiled trace regardless of how many pages
+    the request reserved (unreserved rows scatter into the trash page, whose
+    contents are never exposed by any slot's length mask).
+    """
+    k_buf, v_buf = slot_cache["k"], slot_cache["v"]  # [L, 1, T, Hkv, hd]
+    L, _, T, Hkv, hd = k_buf.shape
+    n_pg = pages.shape[0]                            # == max_pages_per_slot
+    Tv = n_pg * page_size
+
+    def fit_and_scatter(buf, pool):
+        x = buf[:, 0].astype(jnp.float32)            # [L, T, Hkv, hd]
+        valid = (jnp.arange(T) < plen)[None, :, None, None]
+        x = jnp.where(valid, x, 0.0)
+        s = ppq_scale(x, 8, axes=(1, 3), iters=mmse_iters)  # [L,1,Hkv,1]
+        q = quantize(x, s, 8).astype(jnp.int8)
+        if Tv > T:
+            q = jnp.pad(q, ((0, 0), (0, Tv - T), (0, 0), (0, 0)))
+        q = q[:, :Tv].reshape(L, n_pg, page_size, Hkv, hd)
+        return pool.at[:, pages].set(q), s[:, 0, :, 0]      # [L, Hkv]
+
+    new_k, ks = fit_and_scatter(k_buf, cache["k"])
+    new_v, vs = fit_and_scatter(v_buf, cache["v"])
+    cache = {"k": new_k, "v": new_v,
+             "k_scale": cache["k_scale"].at[:, slot].set(ks),
+             "v_scale": cache["v_scale"].at[:, slot].set(vs),
+             "pt": cache["pt"].at[slot].set(pages),
+             "pos": cache["pos"].at[slot].set(plen)}
+    state = _activate_state(state, slot, last_logits, budget, eos,
+                            temperature, top_k, top_p, seed)
+    return cache, state
+
+
+_PAGED_INSTALL = functools.partial(
+    jax.jit, static_argnames=("page_size", "mmse_iters"),
+    donate_argnums=(0, 1))(_paged_install_step)
+
+
+def _retire_slot(cache, slot, trash):
+    """Point an evicted slot's page-table row at the trash page (and zero its
+    pos).  The masked decode step writes EVERY slot's current token
+    unconditionally — after eviction the slot's old pages may be reallocated
+    to another request, so its writes must be redirected before the next
+    step or they would alias the new owner's data."""
+    return {**cache,
+            "pt": cache["pt"].at[slot].set(trash),
+            "pos": cache["pos"].at[slot].set(0)}
+
+
+_RETIRE = jax.jit(_retire_slot, donate_argnums=(0,))
 
 
 @functools.lru_cache(maxsize=32)
@@ -178,13 +284,19 @@ def _serve_steps(cfg: ModelConfig, use_pallas: bool = False,
     same (ModelConfig, kernel-route) pair (conformance tests build many
     engines per config, routed and unrouted).  ``use_pallas``/``interpret``
     come from the engine's DeployPlan and only affect the slot decode step —
-    per-slot prefill is scalar-pos batch-1 and never routes."""
+    per-slot prefill is scalar-pos batch-1 and never routes.
+
+    Two prefill steps: the exact-length one (SSM-family fallback) and the
+    bucketed pad-and-mask one (attention families) whose compiled-trace
+    count is bounded by the bucket menu, not by prompt lengths."""
     prefill = jax.jit(make_prefill_step(cfg, None), donate_argnums=(1,))
+    prefill_b = jax.jit(make_bucketed_prefill_step(cfg, None),
+                        donate_argnums=(1,))
     decode = jax.jit(
         make_slot_decode_step(cfg, None, use_pallas=use_pallas,
                               interpret=interpret),
         donate_argnums=(1, 2))
-    return prefill, decode
+    return prefill, prefill_b, decode
 
 
 def serve_trace_surfaces(cfg: ModelConfig, plan: DeployPlan | None = None,
@@ -205,13 +317,20 @@ def serve_trace_surfaces(cfg: ModelConfig, plan: DeployPlan | None = None,
     decode_fn = make_slot_decode_step(cfg, None, use_pallas=use_pallas,
                                       interpret=interpret)
     prefill_fn = make_prefill_step(cfg, None)
-    cache = jax.eval_shape(lambda: init_slot_cache(cfg, S, scfg.max_len))
+    prefill_bucketed_fn = make_bucketed_prefill_step(cfg, None)
+    # the same KV-layout decision the engine makes: the analyzer traces the
+    # decode step over the paged int8 cache for the families that serve it
+    qcfg = plan.qcfg if plan is not None else None
+    kv = resolve_kv_spec(cfg, scfg, getattr(qcfg, "kv_bits", 8))
+    cache = jax.eval_shape(
+        lambda: init_slot_cache(cfg, S, scfg.max_len, kv=kv))
     # eval_shape over the real initializer: the analyzer's avals can never
     # drift from the state the engine actually feeds the decode step (the
     # sampling leaves — key/temp/top_k/top_p — ride along automatically)
     state = jax.eval_shape(lambda: init_slot_state(S))
     return {"decode_fn": decode_fn, "prefill_fn": prefill_fn,
-            "cache": cache, "state": state, "scfg": scfg}
+            "prefill_bucketed_fn": prefill_bucketed_fn,
+            "cache": cache, "state": state, "scfg": scfg, "kv": kv}
 
 
 def _attn_layer_count(cfg: ModelConfig) -> int:
@@ -331,9 +450,32 @@ class Engine:
                              f"prefill_chunk >= 1, got {self.scfg}")
         self.plan = plan
         self.qcfg = plan.qcfg
+        # MoE capacity footgun: the slot-decode step routes max_slots tokens
+        # at once, and a worst-case batch sends them all to one expert.  A
+        # capacity below that silently DROPS tokens — outputs that are wrong
+        # and vary with batch composition — so refuse to build the engine.
+        moe = getattr(cfg, "moe", None)
+        if moe is not None:
+            T = self.scfg.max_slots
+            cap = max(int(T * moe.top_k / max(moe.n_experts, 1)
+                          * moe.capacity_factor), 1)
+            if cap < T:
+                min_cf = moe.n_experts / max(moe.top_k, 1)
+                raise ValueError(
+                    f"MoE capacity_factor={moe.capacity_factor} cannot hold "
+                    f"a worst-case decode batch: all max_slots={T} tokens "
+                    f"may route to one expert, but per-expert capacity is "
+                    f"int({T}*top_k/n_experts*cf)={cap} < {T}, so tokens "
+                    f"would be silently dropped (wrong outputs that depend "
+                    f"on batch composition). Use capacity_factor >= "
+                    f"{min_cf:g} (= n_experts/top_k) or fewer slots.")
+        self._kv: KVSpec | None = resolve_kv_spec(
+            cfg, self.scfg, getattr(plan.qcfg, "kv_bits", 8))
+        self._mmse_iters = getattr(plan.qcfg, "mmse_iters", 10)
+        self._bucketed = cfg.family in BUCKETED_PREFILL_FAMILIES
         self.params = jax.jit(lambda e: deploy_view(e, plan))(exported)
         self.exported = exported
-        self._prefill, self._decode = _serve_steps(
+        self._prefill, self._prefill_b, self._decode = _serve_steps(
             cfg, bool(plan.use_pallas), plan.interpret)
         # live-buffer accounting (stats()): everything is sized from array
         # shapes+dtypes, so the numbers are machine-independent and cost no
@@ -351,8 +493,13 @@ class Engine:
         Compiled step functions are retained — resetting is cheap."""
         S = self.scfg.max_slots
         self.sched = Scheduler(S)
-        self.cache = init_slot_cache(self.cfg, S, self.scfg.max_len)
+        self.cache = init_slot_cache(self.cfg, S, self.scfg.max_len,
+                                     kv=self._kv)
         self.state = init_slot_state(S)
+        self._pager = (None if self._kv is None
+                       else PageAllocator(self._kv.n_pages))
+        self._slot_pages: dict[int, list[int]] = {}  # slot -> reserved pages
+        self._peak_slots = 0
         self._prefilling: dict[int, dict] = {}    # slot -> prefill progress
         self._alive: set[int] = set()
         self._results: dict[int, list[int]] = {}  # in-flight token streams
@@ -390,7 +537,9 @@ class Engine:
         actual trace.
         """
         n_attn = _attn_layer_count(self.cfg)
-        routed = (n_attn if decode_route(self.cfg, self.scfg.max_len,
+        depth = (self._kv.view_len if self._kv is not None
+                 else self.scfg.max_len)
+        routed = (n_attn if decode_route(self.cfg, depth,
                                          self.plan.use_pallas) else 0)
         live = self._live_bytes()
         return {
@@ -398,6 +547,8 @@ class Engine:
             "decode_attn_ref_layers": n_attn - routed,
             "params_bytes": self._params_bytes,
             "artifact_bytes": self._artifact_bytes,
+            # already at KV precision: the paged cache's int8 pools + scale
+            # + page-table leaves are what _tree_bytes sums
             "slot_cache_bytes": self._cache_bytes,
             "prefill_bytes": len(self._prefilling) * self._prefill_slot_bytes,
             "live_bytes": live,
@@ -406,6 +557,11 @@ class Engine:
             "slots_active": len(self._alive),
             "slots_prefilling": len(self._prefilling),
             "max_slots": self.scfg.max_slots,
+            "peak_slots_active": max(self._peak_slots, len(self._alive)),
+            # page occupancy (0s for a monolithic cache)
+            "kv_page_size": 0 if self._kv is None else self._kv.page_size,
+            "kv_pages_total": 0 if self._kv is None else self._kv.n_pages,
+            "kv_pages_free": 0 if self._pager is None else self._pager.n_free,
         }
 
     # ------------------------------------------------------------ serve API
@@ -423,6 +579,14 @@ class Engine:
                 f"request needs {need} cache positions ({len(p)} prompt + "
                 f"{request.max_new_tokens} new) but ServeConfig.max_len is "
                 f"{self.scfg.max_len}; raise max_len or shorten the request")
+        if self._kv is not None:
+            n_need = self._kv.pages_for(need)
+            if n_need > self._kv.n_pages:
+                raise ValueError(
+                    f"request needs {n_need} KV pages ({need} tokens at "
+                    f"page size {self._kv.page_size}) but the page pool "
+                    f"has only {self._kv.n_pages}; raise ServeConfig."
+                    f"kv_pages or shorten the request")
         if not (request.temperature >= 0.0
                 and math.isfinite(request.temperature)):
             raise ValueError(
@@ -491,28 +655,69 @@ class Engine:
         3. decode: ONE jitted call over all slots + ONE host transfer.
         """
         scfg = self.scfg
-        for slot, req in self.sched.admit():
-            self._prefilling[slot] = {
-                "req": req, "off": 0,
-                "cache": init_cache(self.cfg, 1, scfg.max_len)}
+        can = None
+        reserved: dict[int, list[int]] = {}      # rid -> pages, this round
+        if self._pager is not None:
+            # admit by free pages, reserving AT the admission decision —
+            # Scheduler.admit approves several requests per round, so a
+            # check-then-allocate-later gate would approve two requests
+            # against the same free pages (strictly FIFO; see
+            # Scheduler.admit for the no-starvation contract)
+            def can(r: Request) -> bool:
+                n = self._pages_needed(r)
+                if not self._pager.can_alloc(n):
+                    return False
+                reserved[r.rid] = self._pager.alloc(n)
+                return True
+        for slot, req in self.sched.admit(can):
+            st = {"req": req, "off": 0,
+                  "cache": init_cache(self.cfg, 1, scfg.max_len)}
+            if self._pager is not None:
+                st["pages"] = reserved.pop(req.rid)
+            self._prefilling[slot] = st
+        assert not reserved       # every reservation was claimed by a slot
         # prefill concurrency peaks right after admission, before installs
         self._peak_live_bytes = max(self._peak_live_bytes, self._live_bytes())
 
         for slot in sorted(self._prefilling):
             st = self._prefilling[slot]
             req, off = st["req"], st["off"]
-            chunk = req.prompt[off: off + scfg.prefill_chunk]
-            toks = jnp.asarray([chunk], jnp.int32)
-            logits, st["cache"] = self._prefill(self.params, st["cache"],
-                                                {"tokens": toks})
+            chunk = list(req.prompt[off: off + scfg.prefill_chunk])
+            if self._bucketed:
+                # pad-and-mask to the fixed bucket menu: compiled prefill
+                # traces are bounded by the menu, not by prompt lengths
+                b = bucket_for(len(chunk), scfg.prefill_chunk)
+                toks = jnp.asarray([chunk + [0] * (b - len(chunk))],
+                                   jnp.int32)
+                logits, st["cache"] = self._prefill_b(
+                    self.params, st["cache"], {"tokens": toks},
+                    jnp.asarray(len(chunk), jnp.int32))
+            else:
+                toks = jnp.asarray([chunk], jnp.int32)
+                logits, st["cache"] = self._prefill(self.params, st["cache"],
+                                                    {"tokens": toks})
             st["off"] = off + len(chunk)
             if st["off"] == len(req.prompt):
-                self.cache, self.state = _INSTALL(
-                    self.cache, self.state, st["cache"], slot, logits[0],
-                    len(req.prompt), req.max_new_tokens, req.eos_id,
-                    req.temperature, req.top_k, req.top_p, req.seed)
+                if self._kv is not None:
+                    pages = st["pages"]
+                    padded = pages + [self._kv.trash_page] * (
+                        self._kv.max_pages_per_slot - len(pages))
+                    self.cache, self.state = _PAGED_INSTALL(
+                        self.cache, self.state, st["cache"], slot,
+                        jnp.asarray(padded, jnp.int32), logits[0],
+                        len(req.prompt), req.max_new_tokens, req.eos_id,
+                        req.temperature, req.top_k, req.top_p, req.seed,
+                        page_size=self._kv.page_size,
+                        mmse_iters=self._mmse_iters)
+                    self._slot_pages[slot] = pages
+                else:
+                    self.cache, self.state = _INSTALL(
+                        self.cache, self.state, st["cache"], slot, logits[0],
+                        len(req.prompt), req.max_new_tokens, req.eos_id,
+                        req.temperature, req.top_k, req.top_p, req.seed)
                 self._alive.add(slot)
                 del self._prefilling[slot]
+        self._peak_slots = max(self._peak_slots, len(self._alive))
 
         finished: dict[int, list[int]] = {}
         if self._alive:
@@ -527,11 +732,21 @@ class Engine:
                 if done_h[slot]:
                     self.sched.evict(slot)
                     self._alive.discard(slot)
+                    if self._pager is not None:
+                        # before the next decode step: redirect the slot's
+                        # page-table row to the trash page, then hand its
+                        # pages back to the pool for reuse
+                        self.cache = _RETIRE(self.cache, slot,
+                                             self._kv.trash_page)
+                        self._pager.release(self._slot_pages.pop(slot))
                     del self._work[rid]
                     toks = self._finish_rid(rid)
                     if toks is not None:
                         finished[rid] = toks
         return finished
+
+    def _pages_needed(self, req: Request) -> int:
+        return self._kv.pages_for(len(req.prompt) + req.max_new_tokens)
 
     def _deliver(self, rid: int, token: int, fin: bool) -> None:
         """Route one emitted token: stream buffer / callback for consumer

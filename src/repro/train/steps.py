@@ -93,17 +93,53 @@ def make_prefill_step(cfg: ModelConfig, qcfg: QuantConfig | None, plan=None):
     ``plan`` matters only for fake-quant (student) serving, qcfg not None —
     deployed artifacts run with qcfg=None and carry real quantized weights.
 
-    The continuous-batching serve engine drives this same step for chunked
-    per-slot prefill: batch-1 cache, one *exact-length* prompt chunk per
-    call (never padded — SSM state consumes every token it sees, so pad
-    tokens can't be masked out the way attention masks them).  Prefilling
-    each request alone is what makes its tokens independent of what shares
-    the decode batch (tests/test_serve_scheduler.py).
+    The continuous-batching serve engine drives this step for chunked
+    per-slot prefill of the **SSM-family** configs (ssm, hybrid): batch-1
+    cache, one *exact-length* prompt chunk per call — never padded, because
+    a recurrence consumes every token it sees, so pad tokens can't be
+    masked out the way attention masks them.  Exact lengths mean one
+    compiled trace per distinct remainder length (the documented
+    recompile-vs-correctness fallback); attention families use
+    :func:`make_bucketed_prefill_step` instead, whose trace count is fixed.
+    Prefilling each request alone is what makes its tokens independent of
+    what shares the decode batch (tests/test_serve_scheduler.py).
     """
 
     def prefill_step(params, cache, batch):
         out = forward(params, cfg, qcfg, batch, cache=cache, plan=plan)
         return out["logits"][:, -1], out["cache"]
+
+    return prefill_step
+
+
+def make_bucketed_prefill_step(cfg: ModelConfig, qcfg: QuantConfig | None,
+                               plan=None):
+    """prefill_step(params, cache, batch, real_len) -> (logits, cache), for
+    right-padded prompt chunks (attention families only).
+
+    The recompile-storm fix: the engine pads every prompt piece up to a
+    fixed bucket menu (serve.kv_cache.prefill_buckets), so the number of
+    compiled prefill traces is bounded by the menu size no matter what
+    prompt lengths arrive.  ``real_len`` is a *traced* int32 scalar — the
+    true token count inside the padded chunk; a static argument would
+    recompile per length, defeating the fix.
+
+    Correctness under padding: causal attention means real queries never
+    attend to the trailing pad keys, and the pad rows written into the
+    cache sit at positions >= the slot's final ``pos`` — positions the
+    decode mask (``kv_len = pos + 1``) never exposes.  The forward advances
+    ``pos`` by the padded length, so it is rolled back to the true length
+    here; the returned logits row is the last *real* token's.
+    """
+
+    def prefill_step(params, cache, batch, real_len):
+        B = batch["tokens"].shape[1]
+        out = forward(params, cfg, qcfg, batch, cache=cache, plan=plan)
+        logits = jax.lax.dynamic_slice_in_dim(
+            out["logits"], real_len - 1, 1, axis=1)[:, 0]
+        new_cache = dict(out["cache"])
+        new_cache["pos"] = new_cache["pos"] - (B - real_len)
+        return logits, new_cache
 
     return prefill_step
 
